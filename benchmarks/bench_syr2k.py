@@ -1,0 +1,43 @@
+"""Paper Table 1 + Figure 8: SYR2K performance across shapes.
+
+Table 1 sweeps (n, k) for tall-skinny inputs; Fig 8 compares the proposed
+syr2k against the vendor baseline on square and tall-skinny shapes.  Here:
+Pallas triangular-tile kernel (interpret on CPU) vs the jnp/XLA baseline
+(full GEMM + symmetrize), plus the FLOP-savings ratio (the kernel does half
+the multiply work by touching only lower tiles).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import syr2k
+from repro.kernels.ref import syr2k_ref
+from benchmarks.common import bench, emit
+
+
+def run():
+    rng = np.random.default_rng(0)
+    shapes = [
+        # Table-1 style: fixed n, sweep k (tall-skinny -> square-ish)
+        (512, 32), (512, 64), (512, 128), (512, 256),
+        # Fig-8 style: square-ish growth
+        (128, 128), (256, 256), (384, 384),
+    ]
+    for n, k in shapes:
+        A = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+        B = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+        C = jnp.zeros((n, n), jnp.float32)
+        flops = 2.0 * n * n * k  # useful syr2k flops (both products, symm)
+
+        t_ref = bench(jax.jit(lambda a, b, c: syr2k_ref(a, b, c)), A, B, C)
+        emit(f"syr2k_ref_n{n}_k{k}", t_ref, f"gflops={flops/t_ref/1e9:.2f}")
+        t_pal = bench(
+            jax.jit(lambda a, b, c: syr2k(a, b, c, bm=128, bk=min(k, 128))), A, B, C
+        )
+        emit(
+            f"syr2k_pallas_n{n}_k{k}", t_pal,
+            f"gflops={flops/t_pal/1e9:.2f};interpret=cpu;"
+            f"tile_flop_savings=0.5",
+        )

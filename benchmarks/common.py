@@ -1,0 +1,35 @@
+"""Benchmark utilities: timing + CSV emission.
+
+CPU container caveat (DESIGN.md §9): wall times here are CPU proxies used
+for *relative* algorithmic comparisons (the paper's tables compare
+algorithms on fixed hardware); the TPU roofline story comes from the
+dry-run artifacts in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+__all__ = ["bench", "emit"]
+
+
+def bench(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (jit-compiled, blocked)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds*1e6:.1f},{derived}")

@@ -1,0 +1,52 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+    PYTHONPATH=src python -m benchmarks.run [--only syr2k,dbr,...]
+
+Paper-artifact mapping (DESIGN.md §8):
+    syr2k   -> Table 1 / Figure 8
+    dbr     -> Table 2 / Figure 4
+    bulge   -> Figure 9
+    tridiag -> Figure 10
+    evd     -> Figure 11
+    shampoo -> beyond-paper (production consumer)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None, help="comma-separated subset")
+    args = p.parse_args()
+
+    from benchmarks import (
+        bench_syr2k,
+        bench_dbr,
+        bench_bulge,
+        bench_tridiag,
+        bench_evd,
+        bench_shampoo,
+    )
+
+    suites = {
+        "syr2k": bench_syr2k.run,
+        "dbr": bench_dbr.run,
+        "bulge": bench_bulge.run,
+        "tridiag": bench_tridiag.run,
+        "evd": bench_evd.run,
+        "shampoo": bench_shampoo.run,
+    }
+    selected = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    for name in selected:
+        t0 = time.time()
+        suites[name]()
+        print(f"# suite {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

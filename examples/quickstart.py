@@ -1,0 +1,74 @@
+"""Quickstart: the paper's EVD pipeline on one symmetric matrix.
+
+    PYTHONPATH=src python examples/quickstart.py [--n 256]
+
+Walks the full two-stage pipeline explicitly — DBR band reduction (the
+paper's Algorithm 1), wavefront bulge chasing (Algorithm 2 as a static
+schedule), parallel bisection — and checks the result against
+jnp.linalg.eigh.  Then shows the one-call public API and the Shampoo-facing
+inverse 4th root.
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    band_reduce,
+    band_to_tridiag,
+    extract_tridiag,
+    eigvalsh_tridiag,
+    eigh,
+    inverse_pth_root,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--b", type=int, default=8, help="bandwidth (small = cheap bulge chasing)")
+    ap.add_argument("--nb", type=int, default=64, help="update block (large = compute-bound syr2k)")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    A0 = rng.normal(size=(args.n, args.n)).astype(np.float32)
+    A = jnp.asarray(A0 + A0.T)
+    print(f"symmetric A: {A.shape}, b={args.b}, nb={args.nb} (DBR decouples them)")
+
+    # --- stage 1: Detached Band Reduction --------------------------------
+    t0 = time.perf_counter()
+    B = jax.jit(lambda M: band_reduce(M, args.b, args.nb))(A)
+    jax.block_until_ready(B)
+    print(f"[1] DBR -> bandwidth {args.b}   ({time.perf_counter()-t0:.2f}s incl. compile)")
+
+    # --- stage 2: wavefront bulge chasing ---------------------------------
+    t0 = time.perf_counter()
+    T = jax.jit(lambda M: band_to_tridiag(M, args.b))(B)
+    jax.block_until_ready(T)
+    d, e = extract_tridiag(T)
+    print(f"[2] bulge chasing -> tridiagonal ({time.perf_counter()-t0:.2f}s)")
+
+    # --- stage 3: parallel bisection --------------------------------------
+    w = eigvalsh_tridiag(d, e)
+    w_ref = jnp.linalg.eigvalsh(A)
+    err = float(jnp.abs(jnp.sort(w) - jnp.sort(w_ref)).max() / jnp.abs(w_ref).max())
+    print(f"[3] bisection eigenvalues: max rel err vs LAPACK = {err:.2e}")
+
+    # --- one-call API with eigenvectors ------------------------------------
+    w2, V = eigh(A, b=args.b, nb=args.nb)
+    resid = float(jnp.abs(A @ V - V * w2[None, :]).max() / jnp.abs(w_ref).max())
+    print(f"[4] eigh(): residual |AV - VL| = {resid:.2e}")
+
+    # --- the production consumer -------------------------------------------
+    S = A @ A.T + 0.1 * jnp.eye(args.n)
+    X = inverse_pth_root(S, 4, b=args.b, nb=args.nb)
+    chk = float(jnp.abs(
+        jnp.linalg.matrix_power(X, 4) @ S - jnp.eye(args.n)
+    ).max())
+    print(f"[5] Shampoo inverse 4th root: |X^4 S - I| = {chk:.2e}")
+
+
+if __name__ == "__main__":
+    main()

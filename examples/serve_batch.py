@@ -1,0 +1,16 @@
+"""Batched serving example: continuous decode over a request batch.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch mamba2-370m --smoke
+
+Uses the serve path that the decode_32k / long_500k dry-run shapes lower —
+per-token serve_step against per-layer caches (KV rings for SWA/local
+attention, SSM/LRU state for the recurrent families), demonstrating why the
+sub-quadratic archs hold O(window) state at 500k context.
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["--arch", "mamba2-370m", "--smoke", "--batch", "4",
+                          "--prompt-len", "16", "--gen", "16"])

@@ -1,0 +1,216 @@
+"""Generate EXPERIMENTS.md from the dry-run records + benchmark CSV.
+
+    PYTHONPATH=src python scripts/make_experiments.py \
+        [--dryrun experiments/dryrun] [--bench bench_output.txt]
+
+Sections: §Dry-run (every cell x mesh), §Roofline (single-pod baseline
+table, all 40 cells), §Paper-claims (benchmark-derived validation), §Perf
+(hillclimb log, included from experiments/perf_log.md).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+GIB = 2 ** 30
+MIB = 2 ** 20
+
+IMPROVE_HINTS = {
+    "compute": "compute-bound: raise MXU utilization (larger per-device tiles, bf16 everywhere, fewer remat recomputes)",
+    "memory": "HBM-bound: cut activation traffic (fused flash path, wider fusion, fewer fp32 intermediates, bigger attention chunks)",
+    "collective": "ICI-bound: reduce FSDP all-gather volume (persistent gathered weights / 1-axis FSDP), overlap collectives with compute",
+}
+
+
+def load(dryrun_dir):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_si(x, unit=""):
+    for div, suf in [(1e15, "P"), (1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")]:
+        if abs(x) >= div:
+            return f"{x/div:.2f} {suf}{unit}"
+    return f"{x:.2f} {unit}"
+
+
+def dryrun_section(recs):
+    out = ["## §Dry-run — lower+compile for every (arch × shape × mesh)", ""]
+    out.append(
+        "All cells `jax.jit(step).lower(**input_specs).compile()` on the "
+        "production meshes (single-pod 16×16 = 256 chips; multi-pod 2×16×16 "
+        "= 512 chips, fake CPU devices per the brief). `memory_analysis()` "
+        "peak = arguments + outputs + temps − aliased (per device)."
+    )
+    out.append("")
+    out.append("| arch | shape | mesh | status | compile (s) | peak GiB/dev | HLO GFLOP/dev | coll MiB/dev | collective mix |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        mesh = "2×16×16" if r.get("multi_pod") else "16×16"
+        if r.get("status") == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | SKIP (full attention; "
+                f"DESIGN.md §6) | – | – | – | – | – |"
+            )
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {mesh} | ERROR | – | – | – | – | {r.get('error','')[:60]} |")
+            continue
+        w = r["walk"]
+        mix = ", ".join(
+            f"{k}:{v['operand_bytes']/MIB:.0f}M"
+            for k, v in sorted(w["collectives"].items(),
+                               key=lambda kv: -kv[1]["operand_bytes"])[:3]
+        )
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | ok | {r['compile_s']:.0f} "
+            f"| {r['memory']['peak_estimate_bytes']/GIB:.2f} "
+            f"| {w['flops_per_device']/1e9:,.0f} "
+            f"| {w['collective_bytes_per_device']/MIB:,.0f} | {mix} |"
+        )
+    out.append("")
+    return out
+
+
+def roofline_section(recs):
+    out = ["## §Roofline — single-pod baseline, all 40 cells", ""]
+    out.append(
+        "Terms per brief: compute = HLO_FLOPs/(197 TF/s), memory = "
+        "HLO_bytes/(819 GB/s), collective = collective_operand_bytes/(50 GB/s "
+        "per link) — all per chip from the trip-count-aware HLO walk "
+        "(`repro.analysis.hlo_walk`; XLA's cost_analysis counts scan bodies "
+        "once). MODEL_FLOPS = 6·N_active·D (train), 2·N_active·D (prefill), "
+        "2·N_active·B (decode). `roofline frac` = MODEL_FLOPS-rate at the "
+        "perfect-overlap bound over peak."
+    )
+    out.append("")
+    out.append("| arch | shape | compute (ms) | memory (ms) | coll (ms) | dominant | MODEL/HLO flops | roofline frac | what would move the dominant term |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    singles = [r for r in recs if not r.get("multi_pod")]
+    for r in singles:
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | – | – | – | – | – | – | n/a (skipped: full attention at 500k) |")
+            continue
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        hint = IMPROVE_HINTS[rf["dominant"]]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']*1e3:.1f} "
+            f"| {rf['memory_s']*1e3:.1f} | {rf['collective_s']*1e3:.1f} "
+            f"| **{rf['dominant']}** | {rf['useful_flop_ratio']:.2f} "
+            f"| {rf['roofline_fraction']:.3f} | {hint} |"
+        )
+    out.append("")
+    # summary stats
+    ok = [r for r in singles if r.get("status") == "ok"]
+    by_dom = {}
+    for r in ok:
+        by_dom.setdefault(r["roofline"]["dominant"], []).append(r)
+    out.append("**Bottleneck census (single-pod):** " + ", ".join(
+        f"{k}: {len(v)} cells" for k, v in sorted(by_dom.items())
+    ))
+    worst = sorted(
+        (r for r in ok if r["shape"] == "train_4k"),
+        key=lambda r: r["roofline"]["roofline_fraction"],
+    )
+    if worst:
+        out.append("")
+        out.append(
+            "**Worst train-shape roofline fractions:** "
+            + ", ".join(
+                f"{r['arch']} ({r['roofline']['roofline_fraction']:.3f})"
+                for r in worst[:3]
+            )
+        )
+    out.append("")
+    return out
+
+
+def multipod_section(recs):
+    out = ["## §Multi-pod — 2×16×16 (512 chips) deltas", ""]
+    singles = {(r["arch"], r["shape"]): r for r in recs if not r.get("multi_pod") and r.get("status") == "ok"}
+    out.append("| arch | shape | coll MiB/dev 1-pod | coll MiB/dev 2-pod | Δ | peak GiB 2-pod |")
+    out.append("|---|---|---|---|---|---|")
+    for r in recs:
+        if not r.get("multi_pod") or r.get("status") != "ok":
+            continue
+        key = (r["arch"], r["shape"])
+        if key not in singles:
+            continue
+        c1 = singles[key]["walk"]["collective_bytes_per_device"] / MIB
+        c2 = r["walk"]["collective_bytes_per_device"] / MIB
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {c1:,.0f} | {c2:,.0f} "
+            f"| {(c2-c1)/max(c1,1e-9)*100:+.0f}% "
+            f"| {r['memory']['peak_estimate_bytes']/GIB:.2f} |"
+        )
+    out.append("")
+    out.append(
+        "The pod axis joins data parallelism: the extra collective volume is "
+        "the cross-pod slice of the gradient all-reduce + FSDP gathers, and "
+        "is the first candidate for the int8 error-feedback compressed "
+        "all-reduce (`repro.optim.compression`)."
+    )
+    out.append("")
+    return out
+
+
+def bench_section(bench_file):
+    out = ["## §Benchmarks — raw harness output (one suite per paper table/figure)", ""]
+    if not bench_file or not os.path.exists(bench_file):
+        out.append("_run `PYTHONPATH=src python -m benchmarks.run | tee bench_output.txt` and regenerate._")
+        out.append("")
+        return out
+    rows = [l.strip() for l in open(bench_file) if l.strip() and not l.startswith("#")]
+    out.append("```")
+    out.extend(rows)
+    out.append("```")
+    out.append("")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="experiments/dryrun")
+    ap.add_argument("--bench", default="bench_output.txt")
+    ap.add_argument("--perf-log", default="experiments/perf_log.md")
+    ap.add_argument("--claims", default="experiments/paper_claims.md")
+    ap.add_argument("--out", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+
+    recs = load(args.dryrun)
+    lines = [
+        "# EXPERIMENTS",
+        "",
+        "Reproduction + performance record for the TPU-native two-stage EVD "
+        "framework (see DESIGN.md). Hardware model: TPU v5e — 197 TFLOP/s "
+        "bf16, 819 GB/s HBM, ~50 GB/s/link ICI. Container is CPU-only: "
+        "dry-run artifacts are compiled XLA programs for the production "
+        "meshes; wall-clock numbers in §Paper-claims are CPU proxies for "
+        "algorithm-vs-algorithm ratios only.",
+        "",
+    ]
+    lines += dryrun_section(recs)
+    lines += roofline_section(recs)
+    lines += multipod_section(recs)
+    if os.path.exists(args.claims):
+        lines += open(args.claims).read().splitlines() + [""]
+    lines += bench_section(args.bench)
+    if os.path.exists(args.perf_log):
+        lines += open(args.perf_log).read().splitlines() + [""]
+    else:
+        lines += ["## §Perf", "", "_perf hillclimb log pending_", ""]
+    with open(args.out, "w") as f:
+        f.write("\n".join(lines))
+    print(f"wrote {args.out}: {len(recs)} dry-run records")
+
+
+if __name__ == "__main__":
+    main()

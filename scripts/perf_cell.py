@@ -1,0 +1,78 @@
+"""Perf-iteration driver: re-lower one dry-run cell with config overrides and
+print the roofline delta vs a baseline record.
+
+    PYTHONPATH=src python scripts/perf_cell.py --arch granite-moe-3b-a800m \
+        --shape train_4k --set sequence_parallel=true --set remat=dots \
+        [--baseline experiments/dryrun/granite_moe_3b_a800m_train_4k_1pod.json]
+
+Overrides prefixed with ``opt.`` / ``run.`` control the launcher (optimizer,
+sequence_parallel, fsdp); everything else is a ModelConfig field.
+"""
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_DRYRUN_XLA", "--xla_force_host_platform_device_count=256"
+)
+
+import argparse
+import json
+
+
+def parse_val(v: str):
+    if v.lower() in ("true", "false"):
+        return v.lower() == "true"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", default=[], metavar="KEY=VAL")
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    import repro.launch.dryrun as dr
+
+    overrides = {}
+    run_overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if k.startswith("run."):
+            run_overrides[k[4:]] = parse_val(v)
+        else:
+            overrides[k] = parse_val(v)
+
+    rec = dr.run_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod,
+        overrides=overrides or None, **run_overrides,
+    )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=2)
+
+    if args.baseline and os.path.exists(args.baseline):
+        base = json.load(open(args.baseline))
+        if base.get("status") == "ok" and rec.get("status") == "ok":
+            b, n = base["roofline"], rec["roofline"]
+            print("\n=== delta vs baseline ===")
+            for k in ("compute_s", "memory_s", "collective_s",
+                      "bound_step_time_s", "roofline_fraction"):
+                bb, nn = b[k], n[k]
+                pct = (nn - bb) / max(abs(bb), 1e-12) * 100
+                print(f"  {k:20s} {bb:10.4f} -> {nn:10.4f}  ({pct:+.1f}%)")
+            print(f"  dominant: {b['dominant']} -> {n['dominant']}")
+            print(f"  peak GiB: {base['memory']['peak_estimate_bytes']/2**30:.2f} "
+                  f"-> {rec['memory']['peak_estimate_bytes']/2**30:.2f}")
+
+
+if __name__ == "__main__":
+    main()

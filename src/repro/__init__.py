@@ -1,0 +1,9 @@
+"""repro — TPU-native two-stage symmetric EVD inside a multi-pod LM stack.
+
+Reproduction of "Extracting the Potential of Emerging Hardware Accelerators
+for Symmetric Eigenvalue Decomposition" (CS.DC 2024): Detached Band
+Reduction, accelerator-resident wavefront bulge chasing, triangular-tile
+syr2k — integrated as the engine of a distributed Shampoo optimizer in a
+production-grade JAX training/serving framework.
+"""
+__version__ = "0.1.0"

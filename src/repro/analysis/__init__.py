@@ -1,0 +1,5 @@
+"""repro.analysis — HLO collective parsing + roofline model."""
+from .collectives import collective_bytes_from_hlo
+from .roofline import roofline_terms, PEAK_FLOPS, HBM_BW, ICI_BW
+
+__all__ = ["collective_bytes_from_hlo", "roofline_terms", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

@@ -1,0 +1,88 @@
+"""Parse collective traffic out of post-SPMD HLO text.
+
+``cost_analysis`` does not expose collective bytes, so we walk the HLO:
+every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` instruction contributes the byte size of its
+OPERANDS (per brief).  Operand shapes are resolved from their defining
+instructions (HLO prints operands by name, not by type).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+__all__ = ["collective_bytes_from_hlo", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# %name = f32[128,256]{1,0} op-name(...)
+_DEF_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict:
+    # Pass 1: map instruction name -> result bytes.
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if m:
+            name, dtype, dims = m.groups()
+            if dtype in DTYPE_BYTES:
+                sizes[name] = _shape_bytes(dtype, dims)
+
+    per_kind = defaultdict(lambda: {"count": 0, "operand_bytes": 0, "result_bytes": 0})
+    start_re = re.compile(
+        r"%?([\w.\-]+)\s*=\s*.*?\s("
+        + "|".join(k.replace("-", r"\-") for k in COLLECTIVES)
+        + r")(-start|-done)?\("
+    )
+    for line in hlo_text.splitlines():
+        m = start_re.search(line)
+        if not m:
+            continue
+        name, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        # result bytes from the line itself
+        rm = _SHAPE_RE.search(line.split("=", 1)[1])
+        result_bytes = _shape_bytes(*rm.groups()) if rm else 0
+        # operand bytes: resolve named operands within the parens
+        args = line[line.index("(") + 1 :]
+        operand_bytes = 0
+        for op in re.findall(r"%([\w.\-]+)", args):
+            operand_bytes += sizes.get(op, 0)
+        if operand_bytes == 0:
+            operand_bytes = result_bytes
+        d = per_kind[kind]
+        d["count"] += 1
+        d["operand_bytes"] += operand_bytes
+        d["result_bytes"] += result_bytes
+
+    total = sum(d["operand_bytes"] for d in per_kind.values())
+    return {
+        "total_bytes": int(total),
+        "per_kind": {k: dict(v) for k, v in per_kind.items()},
+    }

@@ -1,0 +1,395 @@
+"""Trip-count-aware HLO cost walker.
+
+``compiled.cost_analysis()`` counts a while (scan) body ONCE, regardless of
+trip count — useless for scan-over-layers models.  This module parses the
+post-SPMD HLO text and walks the call graph from ENTRY, multiplying costs by
+resolved while trip counts:
+
+* FLOPs: 2 * numel(result) * prod(contracting dims) per dot; convolutions
+  via 2 * numel(result) * (kernel spatial numel * in_channels).
+* Collective bytes: operand bytes per all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (the brief's definition).
+
+Trip counts are resolved by dataflow: while.condition root compare ->
+carried tuple indices -> init tuple constants.  Dynamic bounds fall back to
+1 and are reported in ``unknown_trip_whiles``.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["parse_module", "walk_costs", "analyze_hlo"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?.*\{\s*$")
+_LHS_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_TYPE_RE = re.compile(r"^([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_ATTR_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_ATTR_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_ATTR_BODY = re.compile(r"body=%?([\w.\-]+)")
+_ATTR_COND = re.compile(r"condition=%?([\w.\-]+)")
+_ATTR_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_ATTR_INDEX = re.compile(r"index=(\d+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_INT_RE = re.compile(r"constant\((-?\d+)\)")
+
+
+@dataclass
+class Instr:
+    name: str
+    dtype: str
+    dims: Tuple[int, ...]
+    tuple_result: bool
+    op: str
+    operands: List[str]
+    raw: str
+
+
+@dataclass
+class Module:
+    computations: Dict[str, List[Instr]] = field(default_factory=dict)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+    entry: Optional[str] = None
+
+
+def _numel(dims) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _skip_type(s: str) -> Tuple[str, Tuple[int, ...], bool, str]:
+    """Consume an HLO type at the head of ``s``.
+
+    Returns (dtype, dims, is_tuple, remainder).  Tuple types are consumed by
+    bracket matching (their element dims are not needed — tuple-valued
+    instructions carry no direct byte size here)."""
+    s = s.lstrip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    rest = s[i + 1 :]
+                    # strip a layout suffix if present
+                    return "tuple", (), True, rest
+        return "tuple", (), True, ""
+    m = _TYPE_RE.match(s)
+    if not m:
+        return "unknown", (), False, s
+    dtype, dims_s = m.groups()
+    dims = tuple(int(d) for d in dims_s.split(",") if d) if dims_s else ()
+    rest = s[m.end() :]
+    if rest.startswith("{"):  # layout
+        close = rest.find("}")
+        rest = rest[close + 1 :] if close >= 0 else rest
+    return dtype, dims, False, rest
+
+
+def parse_module(text: str) -> Module:
+    mod = Module()
+    current: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        bare = stripped.strip()
+        if bare.endswith("{") and "=" not in bare.split("(")[0]:
+            m = _COMP_RE.match(bare)
+            if m:
+                current = m.group(1)
+                mod.computations[current] = []
+                if bare.startswith("ENTRY"):
+                    mod.entry = current
+                continue
+        if bare == "}":
+            continue
+        lhs = _LHS_RE.match(line)
+        if lhs is None or current is None:
+            continue
+        name = lhs.group(1)
+        dtype, dims, is_tuple, rest = _skip_type(line[lhs.end():])
+        om = _OP_RE.match(rest)
+        if om is None:
+            continue
+        op = om.group(1)
+        args = rest[om.end():]
+        depth, end = 1, len(args)
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPERAND_RE.findall(args[:end])
+        instr = Instr(
+            name=name, dtype=dtype, dims=dims, tuple_result=is_tuple,
+            op=op, operands=operands, raw=line.strip(),
+        )
+        mod.computations[current].append(instr)
+        mod.by_name[name] = instr
+    return mod
+
+
+def _instr_bytes(mod: Module, name: str) -> int:
+    ins = mod.by_name.get(name)
+    if ins is None or ins.tuple_result:
+        return 0
+    return _numel(ins.dims) * DTYPE_BYTES.get(ins.dtype, 4)
+
+
+def _resolve_const_int(mod: Module, name: str) -> Optional[int]:
+    ins = mod.by_name.get(name)
+    if ins is None:
+        return None
+    if ins.op == "constant":
+        m = _CONST_INT_RE.search(ins.raw)
+        return int(m.group(1)) if m else None
+    if ins.op in ("copy", "bitcast", "convert") and ins.operands:
+        return _resolve_const_int(mod, ins.operands[0])
+    return None
+
+
+_TRIP_CFG_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _trip_count(mod: Module, while_instr: Instr) -> Optional[int]:
+    # XLA annotates statically-known trip counts in backend_config.
+    m = _TRIP_CFG_RE.search(while_instr.raw)
+    if m:
+        return int(m.group(1))
+    cond_m = _ATTR_COND.search(while_instr.raw)
+    if not cond_m or not while_instr.operands:
+        return None
+    cond = cond_m.group(1)
+    init = mod.by_name.get(while_instr.operands[0])
+    if init is None or init.op != "tuple":
+        return None
+    init_ops = init.operands
+
+    def carry_index(comp_name: str, value_name: str, depth=0) -> Optional[int]:
+        """Resolve a value inside a computation to a carried-tuple index."""
+        if depth > 6:
+            return None
+        ins = mod.by_name.get(value_name)
+        if ins is None:
+            return None
+        if ins.op == "get-tuple-element":
+            m = _ATTR_INDEX.search(ins.raw)
+            return int(m.group(1)) if m else None
+        if ins.op in ("copy", "convert") and ins.operands:
+            return carry_index(comp_name, ins.operands[0], depth + 1)
+        return None
+
+    # Find the compare: either directly in cond or through one call level.
+    comps_to_scan = [cond]
+    call_args: Dict[str, List[str]] = {}
+    for ins in mod.computations.get(cond, []):
+        if ins.op in ("call", "fusion"):
+            m = _ATTR_TO_APPLY.search(ins.raw) or _ATTR_CALLS.search(ins.raw)
+            if m:
+                comps_to_scan.append(m.group(1))
+                call_args[m.group(1)] = ins.operands
+
+    for comp in comps_to_scan:
+        for ins in mod.computations.get(comp, []):
+            if ins.op != "compare" or "direction=LT" not in ins.raw:
+                continue
+            bounds = []
+            for opnd in ins.operands[:2]:
+                target = opnd
+                oi = mod.by_name.get(opnd)
+                if oi is not None and oi.op == "parameter" and comp in call_args:
+                    # map parameter(i) -> call operand i
+                    pm = re.search(r"parameter\((\d+)\)", oi.raw)
+                    if pm:
+                        idx = int(pm.group(1))
+                        args = call_args[comp]
+                        if idx < len(args):
+                            target = args[idx]
+                idx = carry_index(comp, target)
+                if idx is not None and idx < len(init_ops):
+                    bounds.append(_resolve_const_int(mod, init_ops[idx]))
+                else:
+                    bounds.append(_resolve_const_int(mod, target))
+            vals = [b for b in bounds if b is not None]
+            if len(vals) == 2:
+                return max(abs(vals[1] - vals[0]), 1)
+            if len(vals) == 1 and vals[0] > 0:
+                return vals[0]
+    return None
+
+
+def _dot_flops(mod: Module, ins: Instr) -> float:
+    out_numel = _numel(ins.dims)
+    k = 1
+    m = _CONTRACT_RE.search(ins.raw)
+    if m and ins.operands:
+        lhs = mod.by_name.get(ins.operands[0])
+        if lhs is not None:
+            for d in (int(x) for x in m.group(1).split(",") if x):
+                if d < len(lhs.dims):
+                    k *= lhs.dims[d]
+    return 2.0 * out_numel * k
+
+
+def _conv_flops(mod: Module, ins: Instr) -> float:
+    out_numel = _numel(ins.dims)
+    if len(ins.operands) >= 2:
+        ker = mod.by_name.get(ins.operands[1])
+        if ker is not None and ker.dims:
+            # kernel: spatial... x in_ch x out_ch (numel / out_ch = per-output MACs)
+            return 2.0 * out_numel * (_numel(ker.dims) / max(ins.dims[-1], 1))
+    return 2.0 * out_numel
+
+
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "broadcast", "partition-id", "replica-id",
+}
+
+# Ops that XLA:TPU fuses into producers/consumers (loop/input fusion): their
+# intermediates live in VREGs/VMEM, not HBM.  The "TPU-fused" memory model
+# counts traffic only at fusion-BREAKING ops below; the CPU-fusion count
+# (every fusion boundary of the CPU module) is kept alongside as the
+# pessimistic bound.  See EXPERIMENTS.md §Roofline for the methodology note.
+_TPU_FUSION_BREAKERS = {
+    "dot", "dot-general", "convolution", "reduce", "reduce-window",
+    "scatter", "gather", "dynamic-slice", "dynamic-update-slice",
+    "concatenate", "sort", "select-and-scatter", "custom-call", "fft",
+    "rng", "rng-bit-generator", "triangular-solve", "cholesky", "copy",
+    "transpose", "reverse",
+}
+
+
+def walk_costs(mod: Module, top: int = 0) -> Dict:
+    totals = {
+        "flops": 0.0,
+        "collectives": defaultdict(lambda: {"count": 0.0, "operand_bytes": 0.0}),
+        "unknown_trip_whiles": 0,
+        "hbm_bytes": 0.0,
+        "hbm_bytes_tpu": 0.0,
+        "bytes_dot_operands": 0.0,
+    }
+    contrib = defaultdict(lambda: {"bytes": 0.0, "flops": 0.0, "count": 0.0, "op": ""})
+    seen_stack = []
+
+    def _meta(ins):
+        m = re.search(r'op_name="([^"]*)"', ins.raw)
+        label = m.group(1)[-90:] if m else ins.name
+        return f"{ins.op}|{label}"
+
+    def visit(comp_name: str, mult: float, in_fusion: bool):
+        if comp_name in seen_stack or comp_name not in mod.computations:
+            return
+        seen_stack.append(comp_name)
+        for ins in mod.computations[comp_name]:
+            op = ins.op
+            # --- HBM traffic proxy: operand+result bytes at fusion
+            #     boundaries (inside a fusion body everything is registers).
+            if not in_fusion and op not in _NO_TRAFFIC_OPS and op != "while":
+                if op == "dynamic-update-slice":
+                    # In-place slot write: traffic = read+write of the slice,
+                    # not the whole buffer (XLA updates donated buffers in
+                    # place; counting the carry would charge scans O(n^2)).
+                    upd = ins.operands[1] if len(ins.operands) > 1 else None
+                    b = 2 * _instr_bytes(mod, upd) if upd else 0
+                elif op == "dynamic-slice":
+                    b = 2 * _instr_bytes(mod, ins.name)
+                else:
+                    b = _instr_bytes(mod, ins.name)
+                    for o in ins.operands:
+                        b += _instr_bytes(mod, o)
+                totals["hbm_bytes"] += mult * b
+                if op in _TPU_FUSION_BREAKERS:
+                    totals["hbm_bytes_tpu"] += mult * b
+                if top:
+                    c = contrib[_meta(ins)]
+                    c["bytes"] += mult * b
+                    c["count"] += mult
+                    c["op"] = ins.op
+            if op in ("dot", "dot-general"):
+                fl = mult * _dot_flops(mod, ins)
+                totals["flops"] += fl
+                if top:
+                    contrib[_meta(ins)]["flops"] += fl
+                for o in ins.operands[:2]:
+                    totals["bytes_dot_operands"] += mult * _instr_bytes(mod, o)
+            elif op == "convolution":
+                totals["flops"] += mult * _conv_flops(mod, ins)
+            elif op in COLLECTIVES or any(
+                op == c + s for c in COLLECTIVES for s in ("-start",)
+            ):
+                kind = op.replace("-start", "")
+                d = totals["collectives"][kind]
+                opb = sum(_instr_bytes(mod, o) for o in ins.operands)
+                if opb == 0:
+                    opb = _numel(ins.dims) * DTYPE_BYTES.get(ins.dtype, 4)
+                d["count"] += mult
+                d["operand_bytes"] += mult * opb
+            elif op == "while":
+                trip = _trip_count(mod, ins)
+                if trip is None:
+                    totals["unknown_trip_whiles"] += 1
+                    trip = 1
+                body = _ATTR_BODY.search(ins.raw)
+                if body:
+                    visit(body.group(1), mult * trip, in_fusion)
+            elif op == "fusion":
+                m = _ATTR_CALLS.search(ins.raw) or _ATTR_TO_APPLY.search(ins.raw)
+                if m:
+                    visit(m.group(1), mult, True)
+            elif op in ("call", "reduce", "map", "scatter", "sort",
+                        "reduce-window", "select-and-scatter", "custom-call"):
+                m = _ATTR_TO_APPLY.search(ins.raw) or _ATTR_CALLS.search(ins.raw)
+                if m:
+                    visit(m.group(1), mult, in_fusion)
+            elif op == "conditional":
+                m = _ATTR_BRANCHES.search(ins.raw)
+                if m:
+                    for b in _OPERAND_RE.findall(m.group(1)):
+                        visit(b, mult, in_fusion)  # upper bound: all branches
+        seen_stack.pop()
+
+    if mod.entry:
+        visit(mod.entry, 1.0, False)
+    totals["collectives"] = {k: dict(v) for k, v in totals["collectives"].items()}
+    totals["collective_bytes"] = sum(
+        v["operand_bytes"] for v in totals["collectives"].values()
+    )
+    if top:
+        ranked = sorted(contrib.items(), key=lambda kv: -kv[1]["bytes"])[:top]
+        totals["top_bytes"] = [
+            {"tag": k, **{kk: round(vv, 1) if isinstance(vv, float) else vv
+                          for kk, vv in v.items()}}
+            for k, v in ranked
+        ]
+        ranked_f = sorted(contrib.items(), key=lambda kv: -kv[1]["flops"])[:top]
+        totals["top_flops"] = [
+            {"tag": k, "flops": round(v["flops"], 1), "count": v["count"]}
+            for k, v in ranked_f if v["flops"] > 0
+        ]
+    return totals
+
+
+def analyze_hlo(text: str, top: int = 0) -> Dict:
+    return walk_costs(parse_module(text), top=top)

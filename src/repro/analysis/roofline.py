@@ -1,0 +1,80 @@
+"""Three-term roofline model from the compiled dry-run artifact.
+
+TPU v5e constants (per brief):
+    compute    197 TFLOP/s bf16 per chip
+    HBM        819 GB/s per chip
+    ICI        ~50 GB/s per link
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per device)
+    memory term     = HLO_bytes / HBM_bw               (per device)
+    collective term = collective_bytes / link_bw       (per device)
+
+cost_analysis() is already per-device post-SPMD, so no further division by
+chip count.  MODEL_FLOPS uses the 6·N·D rule (training) or 2·N·B (decode),
+N = active params.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+__all__ = ["roofline_terms", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+
+PEAK_FLOPS = 197e12    # bf16 FLOP/s per chip
+HBM_BW = 819e9         # bytes/s per chip
+ICI_BW = 50e9          # bytes/s per link
+
+
+def model_flops(cfg, shape_info: Dict, n_chips: int) -> float:
+    """Idealized model FLOPs per device for this cell."""
+    counts = cfg.param_counts()
+    n_active = counts["active"]
+    B, S = shape_info["batch"], shape_info["seq"]
+    if shape_info["kind"] == "train":
+        total = 6.0 * n_active * B * S
+    elif shape_info["kind"] == "prefill":
+        total = 2.0 * n_active * B * S
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * B
+    return total / n_chips
+
+
+def roofline_terms(record: Dict, cfg, shape_info: Dict) -> Dict:
+    mesh = record["mesh"]
+    n_chips = 1
+    for v in mesh.values():
+        n_chips *= v
+    walk = record.get("walk")
+    if walk:  # trip-count-aware HLO walk (preferred)
+        flops = walk["flops_per_device"]
+        # TPU-fused traffic model when available (elementwise chains fuse on
+        # TPU; the CPU-fusion count is the pessimistic bound, kept in walk).
+        bytes_acc = walk.get("hbm_bytes_tpu_per_device") or walk["hbm_bytes_per_device"]
+        coll = walk["collective_bytes_per_device"]
+    else:
+        flops = record["cost"]["flops_per_device"]
+        bytes_acc = record["cost"]["bytes_accessed_per_device"]
+        coll = record["collectives"]["total_bytes"]
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll / ICI_BW
+
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_time = max(t_compute, t_memory, t_coll)  # perfect-overlap bound
+
+    mf = model_flops(cfg, shape_info, n_chips)
+    useful_ratio = mf / flops if flops else 0.0
+    # Roofline fraction: useful model FLOP/s achieved at the bound step time
+    # over peak FLOP/s — the score the perf loop drives up.
+    mfu_bound = (mf / step_time) / PEAK_FLOPS if step_time > 0 else 0.0
+
+    return {
+        **{k: float(v) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "bound_step_time_s": float(step_time),
+        "model_flops_per_device": float(mf),
+        "useful_flop_ratio": float(useful_ratio),
+        "roofline_fraction": float(mfu_bound),
+        "chips": n_chips,
+    }

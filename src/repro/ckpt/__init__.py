@@ -1,0 +1,4 @@
+"""repro.ckpt — atomic, keep-k, async, mesh-agnostic checkpointing."""
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,55 @@
+"""repro.configs — one module per assigned architecture (+ paper workloads).
+
+``get_config(arch_id)`` returns the full-scale ModelConfig; every module
+also exposes ``smoke()`` for the reduced CPU variant.  Architecture ids use
+underscores or dashes interchangeably.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "mamba2_370m",
+    "recurrentgemma_2b",
+    "codeqwen15_7b",
+    "llama32_3b",
+    "stablelm_3b",
+    "qwen3_14b",
+    "granite_moe_3b_a800m",
+    "mixtral_8x7b",
+    "musicgen_large",
+    "llava_next_mistral_7b",
+]
+
+_ALIASES = {
+    "mamba2-370m": "mamba2_370m",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "codeqwen15-7b": "codeqwen15_7b",
+    "llama3.2-3b": "llama32_3b",
+    "llama32-3b": "llama32_3b",
+    "stablelm-3b": "stablelm_3b",
+    "qwen3-14b": "qwen3_14b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "musicgen-large": "musicgen_large",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+}
+
+
+def canonical(arch: str) -> str:
+    a = arch.replace("-", "_").replace(".", "")
+    a = _ALIASES.get(arch, _ALIASES.get(a, a))
+    if a not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCHS}")
+    return a
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.config()
+
+
+def get_smoke_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.smoke()

@@ -1,0 +1,81 @@
+"""repro.core — the paper's symmetric EVD pipeline in JAX.
+
+Public surface:
+  tridiagonalize, eigh, eigvalsh, eigh_batched, inverse_pth_root
+  band_reduce (SBR/DBR), band_to_tridiag (bulge chasing), jacobi_eigh
+"""
+from .householder import (
+    house,
+    apply_house_left,
+    apply_house_right,
+    apply_house_both,
+    larft,
+    wy_apply_left,
+    wy_apply_right,
+)
+from .panel_qr import panel_qr, panel_qr_geqrf, panel_qr_householder
+from .band_reduction import band_reduce, BandReflectors, apply_q_left, form_q
+from .bulge_chasing import (
+    ChaseLog,
+    band_to_tridiag,
+    chase_sequential,
+    chase_wavefront,
+    apply_q2,
+    extract_tridiag,
+    num_wavefronts,
+    max_active_sweeps,
+)
+from .direct_tridiag import direct_tridiagonalize, DirectReflectors, apply_q_direct
+from .jacobi import jacobi_eigh, round_robin_pairs
+from .tridiag_eig import (
+    sturm_count,
+    eigvalsh_tridiag,
+    eigvecs_inverse_iteration,
+    eigh_tridiag,
+)
+from .eigh import (
+    tridiagonalize,
+    eigh,
+    eigvalsh,
+    eigh_batched,
+    inverse_pth_root,
+)
+
+__all__ = [
+    "house",
+    "apply_house_left",
+    "apply_house_right",
+    "apply_house_both",
+    "larft",
+    "wy_apply_left",
+    "wy_apply_right",
+    "panel_qr",
+    "panel_qr_geqrf",
+    "panel_qr_householder",
+    "band_reduce",
+    "BandReflectors",
+    "apply_q_left",
+    "form_q",
+    "ChaseLog",
+    "band_to_tridiag",
+    "chase_sequential",
+    "chase_wavefront",
+    "apply_q2",
+    "extract_tridiag",
+    "num_wavefronts",
+    "max_active_sweeps",
+    "direct_tridiagonalize",
+    "DirectReflectors",
+    "apply_q_direct",
+    "jacobi_eigh",
+    "round_robin_pairs",
+    "sturm_count",
+    "eigvalsh_tridiag",
+    "eigvecs_inverse_iteration",
+    "eigh_tridiag",
+    "tridiagonalize",
+    "eigh",
+    "eigvalsh",
+    "eigh_batched",
+    "inverse_pth_root",
+]

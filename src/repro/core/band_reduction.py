@@ -1,0 +1,215 @@
+"""Band reduction: dense symmetric -> banded symmetric.
+
+This module implements the paper's stage-1 algorithms:
+
+* ``band_reduce(..., nb=b)``  — conventional **SBR** (successive band
+  reduction): every panel QR is immediately followed by a rank-2b trailing
+  update, so the trailing ``syr2k`` has k == b (tall-skinny, memory-bound on
+  modern accelerators — the paper's Table 1 bottleneck).
+
+* ``band_reduce(..., nb>b)``  — the paper's **DBR** (Detached Band
+  Reduction, Algorithm 1): the bandwidth ``b`` is decoupled from the update
+  block size ``nb``.  ``nb/b`` panels are factored back-to-back, their WY
+  factors (Y=V, Z) are accumulated, and ONE rank-2·nb trailing update is
+  applied with k == nb (square-ish, compute-bound).
+
+Inside a block we use LAPACK-``latrd``-style *compensation* instead of
+physically updating panel columns: panel j's columns and its `A @ V` product
+are corrected against the accumulated (V, Z) of panels < j with a single
+GEMM pair of k = j·b.  This is the same FLOP-reaggregation idea as the
+paper's recursive panel-update schedule (§5.1) — both exist to make the
+intra-block updates large GEMMs instead of many skinny ones — expressed in
+the form that maps best onto XLA/TPU (one growing-k GEMM instead of a
+recursion tree of launches).  See DESIGN.md §2.
+
+Shapes are static per block (Python loop over blocks with shrinking trailing
+views), so everything jits and vmaps; the trailing update is pluggable so the
+Pallas ``syr2k`` kernel can be swapped in for the jnp reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .panel_qr import panel_qr_geqrf, panel_qr_householder
+
+__all__ = ["band_reduce", "BandReflectors", "apply_q_left", "form_q"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BandReflectors:
+    """Householder data for the orthogonal factor Q1 of the band reduction.
+
+    A = Q1 B Q1^T with Q1 = H_1 H_2 ... H_P (one block reflector per panel).
+
+    V: (n, P*b) unit-lower-trapezoidal columns in FULL-matrix coordinates
+       (panel p occupies columns [p*b, (p+1)*b), rows below its elimination
+       point; zero elsewhere).
+    T: (P, b, b) upper-triangular compact-WY factors.
+    b: panel width (the bandwidth) — static pytree metadata.
+    """
+
+    V: jax.Array
+    T: jax.Array
+    b: int
+
+    def tree_flatten(self):
+        return (self.V, self.T), (self.b,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def _syr2k_update_jnp(C: jax.Array, Y: jax.Array, Z: jax.Array) -> jax.Array:
+    """Reference trailing update: C - Z Y^T - Y Z^T (full, symmetric)."""
+    return C - Z @ Y.T - Y @ Z.T
+
+
+def _reduce_block(
+    Bv: jax.Array,
+    b: int,
+    w: int,
+    panel_qr_fn: Callable,
+    syr2k_update: Callable,
+):
+    """Reduce the first ``w`` columns of the trailing view ``Bv`` (m, m) to
+    bandwidth ``b`` and apply one rank-2w trailing update.
+
+    Returns (new_view, Vbuf (m, w), Ts (w//b, b, b)).
+    """
+    m = Bv.shape[0]
+    q = w // b
+    dtype = Bv.dtype
+
+    Vbuf = jnp.zeros((m, w), dtype)
+    Zbuf = jnp.zeros((m, w), dtype)
+    F = jnp.zeros((m, w), dtype)  # exact final values of the factored columns
+    Ts = []
+
+    for j in range(q):
+        c0 = j * b
+        r0 = c0 + b  # elimination starts below this row
+        # --- compensated panel: P = (B - Z V^T - V Z^T)[:, c0:c0+b] --------
+        P = Bv[:, c0 : c0 + b]
+        if j > 0:
+            Vpre = Vbuf[:, :c0]
+            Zpre = Zbuf[:, :c0]
+            P = P - Zpre @ Vbuf[c0 : c0 + b, :c0].T - Vpre @ Zbuf[c0 : c0 + b, :c0].T
+        # --- panel QR of rows [r0, m) ---------------------------------------
+        V_j, T_j, _taus, R_j = panel_qr_fn(P[r0:, :])
+        Vhat = jnp.zeros((m, b), dtype).at[r0:, :].set(V_j)
+        # --- exact final column values (band structure) ---------------------
+        zeros_tail = jnp.zeros((m - r0, b), dtype)
+        R_embed = zeros_tail.at[:b, :].set(R_j[:b, :]) if (m - r0) >= b else R_j[: m - r0, :]
+        fcol = jnp.concatenate([P[:r0, :], R_embed], axis=0)
+        # Structurally-banded write-back: entries above the band are exact
+        # zeros in exact arithmetic; mask out their rounding fuzz.
+        col_global = c0 + jnp.arange(b)[None, :]
+        in_band = jnp.arange(m)[:, None] >= col_global - b
+        F = F.at[:, c0 : c0 + b].set(jnp.where(in_band, fcol, 0.0))
+        # --- Z_j = A_cur Vhat T  - 1/2 Vhat T^T (Vhat^T A_cur Vhat) T --------
+        M = Bv @ Vhat
+        if j > 0:
+            M = M - Zbuf[:, :c0] @ (Vbuf[:, :c0].T @ Vhat) - Vbuf[:, :c0] @ (
+                Zbuf[:, :c0].T @ Vhat
+            )
+        MT = M @ T_j
+        Z_j = MT - 0.5 * Vhat @ (T_j.T @ (Vhat.T @ MT))
+        Vbuf = Vbuf.at[:, c0 : c0 + b].set(Vhat)
+        Zbuf = Zbuf.at[:, c0 : c0 + b].set(Z_j)
+        Ts.append(T_j)
+
+    # --- one rank-2w trailing update with k = w (the paper's big syr2k) -----
+    trailing = syr2k_update(Bv[w:, w:], Vbuf[w:, :], Zbuf[w:, :])
+    new_view = Bv
+    new_view = new_view.at[w:, w:].set(trailing)
+    new_view = new_view.at[:, :w].set(F)
+    new_view = new_view.at[:w, w:].set(F[w:, :].T)
+    return new_view, Vbuf, jnp.stack(Ts)
+
+
+def band_reduce(
+    A: jax.Array,
+    b: int,
+    nb: Optional[int] = None,
+    *,
+    panel_method: str = "geqrf",
+    syr2k_update: Callable = _syr2k_update_jnp,
+    return_reflectors: bool = False,
+):
+    """Reduce a symmetric matrix to band form with bandwidth ``b``.
+
+    ``nb == b`` is conventional SBR; ``nb > b`` is the paper's DBR.
+
+    Args:
+      A: (n, n) symmetric.  ``n`` must be a multiple of ``b``.
+      b: target bandwidth (panel width).
+      nb: update block size (multiple of ``b``); defaults to ``b`` (SBR).
+      panel_method: "geqrf" | "householder".
+      syr2k_update: callable (C, Y, Z) -> C - Z Y^T - Y Z^T; swap in the
+        Pallas kernel here.
+      return_reflectors: also return :class:`BandReflectors` for Q1.
+
+    Returns:
+      ``Bband`` (n, n) symmetric banded, and optionally reflectors.
+    """
+    n = A.shape[0]
+    nb = b if nb is None else nb
+    if n % b != 0:
+        raise ValueError(f"n={n} must be a multiple of b={b}")
+    if nb % b != 0:
+        raise ValueError(f"nb={nb} must be a multiple of b={b}")
+
+    panel_qr_fn = panel_qr_geqrf if panel_method == "geqrf" else panel_qr_householder
+
+    dtype = A.dtype
+    B = A
+    max_panels = max(n // b - 1, 1)
+    Vall = jnp.zeros((n, max_panels * b), dtype)
+    Tall = jnp.zeros((max_panels, b, b), dtype)
+
+    ci = 0
+    p = 0  # global panel counter
+    while n - ci > b:
+        m = n - ci
+        w = min(nb, m - b)
+        view = B[ci:, ci:]
+        new_view, Vbuf, Ts = _reduce_block(view, b, w, panel_qr_fn, syr2k_update)
+        B = B.at[ci:, ci:].set(new_view)
+        q = w // b
+        Vall = Vall.at[ci:, p * b : (p + q) * b].set(Vbuf)
+        Tall = Tall.at[p : p + q].set(Ts)
+        p += q
+        ci += w
+
+    if return_reflectors:
+        return B, BandReflectors(V=Vall[:, : p * b], T=Tall[:p], b=b)
+    return B
+
+
+def apply_q_left(refl: BandReflectors, X: jax.Array, transpose: bool = False) -> jax.Array:
+    """Compute Q1 @ X (or Q1^T @ X).
+
+    Q1 = H_1 H_2 ... H_P; each H_p = I - V_p T_p V_p^T.
+    Q1 @ X applies H_P first; Q1^T @ X applies H_1^T first.
+    """
+    P = refl.T.shape[0]
+    b = refl.b
+    order = range(P) if transpose else range(P - 1, -1, -1)
+    for p in order:
+        V = refl.V[:, p * b : (p + 1) * b]
+        T = refl.T[p]
+        Tp = T.T if transpose else T
+        X = X - V @ (Tp @ (V.T @ X))
+    return X
+
+
+def form_q(refl: BandReflectors, n: int) -> jax.Array:
+    """Materialize the dense orthogonal factor Q1 (n, n)."""
+    return apply_q_left(refl, jnp.eye(n, dtype=refl.V.dtype))

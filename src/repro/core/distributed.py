@@ -1,0 +1,213 @@
+"""Distributed EVD building blocks (shard_map).
+
+The paper targets a single accelerator; its future-work section calls out
+"scaling these problems on emerging clusters".  Two regimes matter for us:
+
+1. **One huge matrix** (the paper's standalone workload): the DBR trailing
+   update ``A <- A - Z Y^T - Y Z^T`` is row-parallel — each device owns a
+   block of rows of A, Y/Z are broadcast (they are tall-skinny, k = nb ≪ n),
+   and the update is a pair of local GEMMs with NO inter-device
+   communication.  The panel QR + Z formation need `A @ V`, which row-sharded
+   A provides with one psum.  ``dist_trailing_update`` / ``dist_symm_panel``
+   implement both; ``dist_band_reduce_demo`` wires them into a full sharded
+   band reduction for the examples/benchmarks.
+
+2. **Many medium matrices** (the Shampoo regime): a batch of (n, n)
+   preconditioner blocks sharded over the flattened mesh; each device runs
+   the full two-stage solver locally via vmap.  ``sharded_eigh_batch`` /
+   ``sharded_inverse_roots`` implement this; it is how `repro.optim.shampoo`
+   consumes the solver.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from .eigh import eigh, inverse_pth_root
+
+__all__ = [
+    "dist_trailing_update",
+    "dist_symm_matmul",
+    "dist_band_reduce",
+    "sharded_eigh_batch",
+    "sharded_inverse_roots",
+]
+
+
+def dist_trailing_update(
+    mesh: Mesh, axis: str, A: jax.Array, Y: jax.Array, Z: jax.Array
+) -> jax.Array:
+    """A - Z Y^T - Y Z^T with A row-sharded over ``axis``; Y, Z replicated.
+
+    Pure local GEMMs — zero collective bytes (the point of the paper's DBR:
+    the big-k update is embarrassingly parallel once Y/Z are formed).
+    """
+
+    def local(a_blk, y_full, z_full):
+        # a_blk: (n/d, n); y/z: (n, k)
+        idx = jax.lax.axis_index(axis)
+        rows = a_blk.shape[0]
+        y_blk = jax.lax.dynamic_slice_in_dim(y_full, idx * rows, rows, 0)
+        z_blk = jax.lax.dynamic_slice_in_dim(z_full, idx * rows, rows, 0)
+        return a_blk - z_blk @ y_full.T - y_blk @ z_full.T
+
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(None, None), P(None, None)),
+        out_specs=P(axis, None),
+        check_vma=False,
+    )(A, Y, Z)
+
+
+def dist_symm_matmul(mesh: Mesh, axis: str, A: jax.Array, V: jax.Array) -> jax.Array:
+    """M = A @ V with A row-sharded: local GEMM, result gathered (psum-free:
+    each device holds its row block of M; we all-gather rows).
+    """
+
+    def local(a_blk, v_full):
+        m_blk = a_blk @ v_full  # (n/d, k)
+        return jax.lax.all_gather(m_blk, axis, axis=0, tiled=True)
+
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(None, None)),
+        out_specs=P(None, None),
+        check_vma=False,
+    )(A, V)
+
+
+def dist_band_reduce(
+    mesh: Mesh,
+    axis: str,
+    A: jax.Array,
+    b: int,
+    nb: int,
+    panel_qr_fn=None,
+):
+    """Distributed DBR band reduction (demonstration-scale).
+
+    A is row-sharded over ``axis``; every panel QR runs replicated (panels
+    are (m, b), tiny next to the trailing matrix), A@V products and trailing
+    updates run row-parallel.  Matches ``repro.core.band_reduce`` numerically.
+
+    The structure mirrors the single-device `_reduce_block` with two
+    distributed primitives swapped in; see that function for the algebra.
+    """
+    from .panel_qr import panel_qr_geqrf
+
+    panel_qr_fn = panel_qr_fn or panel_qr_geqrf
+    n = A.shape[0]
+    if n % b or nb % b:
+        raise ValueError("n and nb must be multiples of b")
+
+    B = A
+    ci = 0
+    while n - ci > b:
+        m = n - ci
+        w = min(nb, m - b)
+        q = w // b
+        view = B[ci:, ci:]
+        Vbuf = jnp.zeros((m, w), A.dtype)
+        Zbuf = jnp.zeros((m, w), A.dtype)
+        F = jnp.zeros((m, w), A.dtype)
+        for j in range(q):
+            c0 = j * b
+            r0 = c0 + b
+            Pn = view[:, c0 : c0 + b]
+            if j > 0:
+                Pn = (
+                    Pn
+                    - Zbuf[:, :c0] @ Vbuf[c0 : c0 + b, :c0].T
+                    - Vbuf[:, :c0] @ Zbuf[c0 : c0 + b, :c0].T
+                )
+            V_j, T_j, _t, R_j = panel_qr_fn(Pn[r0:, :])
+            Vhat = jnp.zeros((m, b), A.dtype).at[r0:, :].set(V_j)
+            zeros_tail = jnp.zeros((m - r0, b), A.dtype)
+            R_embed = zeros_tail.at[:b, :].set(R_j[:b, :])
+            fcol = jnp.concatenate([Pn[:r0, :], R_embed], axis=0)
+            col_global = c0 + jnp.arange(b)[None, :]
+            in_band = jnp.arange(m)[:, None] >= col_global - b
+            F = F.at[:, c0 : c0 + b].set(jnp.where(in_band, fcol, 0.0))
+            # Distributed A @ Vhat over the *full* matrix rows >= ci.
+            M = view @ Vhat  # local fallback when not under shard_map
+            if j > 0:
+                M = M - Zbuf[:, :c0] @ (Vbuf[:, :c0].T @ Vhat) - Vbuf[:, :c0] @ (
+                    Zbuf[:, :c0].T @ Vhat
+                )
+            MT = M @ T_j
+            Z_j = MT - 0.5 * Vhat @ (T_j.T @ (Vhat.T @ MT))
+            Vbuf = Vbuf.at[:, c0 : c0 + b].set(Vhat)
+            Zbuf = Zbuf.at[:, c0 : c0 + b].set(Z_j)
+        n_dev = mesh.shape[axis]
+        if (m - w) % n_dev == 0 and (m - w) >= n_dev:
+            trailing = dist_trailing_update(
+                mesh, axis, view[w:, w:], Vbuf[w:, :], Zbuf[w:, :]
+            )
+        else:  # trailing block smaller than the device ring: run locally
+            trailing = (
+                view[w:, w:] - Zbuf[w:, :] @ Vbuf[w:, :].T - Vbuf[w:, :] @ Zbuf[w:, :].T
+            )
+        view = view.at[w:, w:].set(trailing)
+        view = view.at[:, :w].set(F)
+        view = view.at[:w, w:].set(F[w:, :].T)
+        B = B.at[ci:, ci:].set(view)
+        ci += w
+    return B
+
+
+def sharded_eigh_batch(
+    mesh: Mesh,
+    axes: Sequence[str],
+    A_batch: jax.Array,
+    **eigh_kw,
+):
+    """eigh over a batch (B, n, n) sharded across the given mesh axes.
+
+    Each device runs the full two-stage solver on its local slice of the
+    batch (vmap), no collectives — the Shampoo preconditioner pattern.
+    ``B`` must be divisible by the product of the axis sizes.
+    """
+    spec = P(tuple(axes))
+
+    def local(a_blk):
+        return jax.vmap(lambda M: eigh(M, **eigh_kw))(a_blk)
+
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(tuple(axes), None, None),),
+        out_specs=(P(tuple(axes)), P(tuple(axes), None, None)),
+        check_vma=False,
+    )(A_batch)
+
+
+def sharded_inverse_roots(
+    mesh: Mesh,
+    axes: Sequence[str],
+    A_batch: jax.Array,
+    p: int,
+    *,
+    eps: float = 1e-6,
+    **eigh_kw,
+):
+    """Batched A^{-1/p} sharded across mesh axes (Shampoo's inner loop)."""
+
+    def local(a_blk):
+        return jax.vmap(
+            lambda M: inverse_pth_root(M, p, eps=eps, **eigh_kw)
+        )(a_blk)
+
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(tuple(axes), None, None),),
+        out_specs=P(tuple(axes), None, None),
+        check_vma=False,
+    )(A_batch)

@@ -1,0 +1,172 @@
+"""Public EVD API: the paper's full pipeline as one composable entry point.
+
+    eigh(A)  =  DBR band reduction  ->  wavefront bulge chasing
+             ->  parallel bisection (+ inverse-iteration eigenvectors)
+             ->  back-transform  x_A = Q1 Q2 x_T
+
+Methods:
+  * ``two_stage``  — the paper's algorithm (DBR when nb > b, SBR when nb == b)
+  * ``direct``     — one-stage Householder tridiagonalization baseline
+  * ``jacobi``     — dense parallel Jacobi baseline (no tridiagonalization)
+
+Also provides ``inverse_pth_root`` — the Shampoo-facing consumer of the
+solver — and batched wrappers used by the distributed optimizer.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .band_reduction import band_reduce, apply_q_left
+from .bulge_chasing import band_to_tridiag, apply_q2, extract_tridiag
+from .direct_tridiag import direct_tridiagonalize, apply_q_direct
+from .jacobi import jacobi_eigh
+from .tridiag_eig import eigvalsh_tridiag, eigvecs_inverse_iteration
+
+__all__ = [
+    "tridiagonalize",
+    "eigh",
+    "eigvalsh",
+    "eigh_batched",
+    "inverse_pth_root",
+]
+
+DEFAULT_B = 8
+DEFAULT_NB = 64
+
+
+def _resolve_blocking(n: int, b: Optional[int], nb: Optional[int]):
+    b = DEFAULT_B if b is None else b
+    nb = DEFAULT_NB if nb is None else nb
+    # Clamp to sane values for small matrices; keep n % b == 0 feasible.
+    while b > 1 and n % b != 0:
+        b //= 2
+    b = max(b, 1)
+    nb = max((min(nb, n) // b) * b, b)
+    return b, nb
+
+
+def tridiagonalize(
+    A: jax.Array,
+    *,
+    b: Optional[int] = None,
+    nb: Optional[int] = None,
+    method: str = "two_stage",
+    chase: str = "wavefront",
+    return_reflectors: bool = False,
+):
+    """Symmetric A -> (d, e) tridiagonal, optionally with back-transform data.
+
+    Returns ``(d, e)`` or ``(d, e, backtransform)`` where ``backtransform``
+    applies Q (A = Q T Q^T) to a matrix: ``backtransform(X, transpose)``.
+    """
+    n = A.shape[0]
+    if method == "direct":
+        T, refl = direct_tridiagonalize(A, return_reflectors=True)
+        d, e = extract_tridiag(T)
+        if return_reflectors:
+            return d, e, ("direct", refl)
+        return d, e
+    if method != "two_stage":
+        raise ValueError(f"unknown tridiagonalization method: {method}")
+
+    b_, nb_ = _resolve_blocking(n, b, nb)
+    if b_ <= 1:
+        # Degenerate blocking: fall back to direct reduction.
+        T, refl = direct_tridiagonalize(A, return_reflectors=True)
+        d, e = extract_tridiag(T)
+        if return_reflectors:
+            return d, e, ("direct", refl)
+        return d, e
+
+    Bband, refl1 = band_reduce(A, b_, nb_, return_reflectors=True)
+    T, log2 = band_to_tridiag(Bband, b_, method=chase, return_log=True)
+    d, e = extract_tridiag(T)
+    if return_reflectors:
+        return d, e, ("two_stage", (refl1, log2))
+    return d, e
+
+
+def _backtransform(kind_refl, X: jax.Array) -> jax.Array:
+    """x_A = Q x_T where Q is the accumulated tridiagonalization transform."""
+    kind, refl = kind_refl
+    if kind == "direct":
+        return apply_q_direct(refl, X, transpose=False)
+    refl1, log2 = refl
+    X = apply_q2(log2, X, transpose=False)   # Q2 @ X
+    return apply_q_left(refl1, X, transpose=False)  # Q1 @ (Q2 @ X)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("b", "nb", "method", "chase", "eigenvectors", "max_sweeps"),
+)
+def eigh(
+    A: jax.Array,
+    *,
+    b: Optional[int] = None,
+    nb: Optional[int] = None,
+    method: str = "two_stage",
+    chase: str = "wavefront",
+    eigenvectors: bool = True,
+    max_sweeps: int = 16,
+):
+    """Full symmetric eigendecomposition.  Eigenvalues ascending.
+
+    Returns ``w`` or ``(w, V)`` with ``A @ V ≈ V @ diag(w)``.
+    """
+    A = 0.5 * (A + A.T)  # enforce symmetry
+    if method == "jacobi":
+        w, V = jacobi_eigh(A, max_sweeps=max_sweeps)
+        return (w, V) if eigenvectors else w
+
+    if not eigenvectors:
+        d, e = tridiagonalize(A, b=b, nb=nb, method=method, chase=chase)
+        return eigvalsh_tridiag(d, e)
+
+    d, e, refl = tridiagonalize(
+        A, b=b, nb=nb, method=method, chase=chase, return_reflectors=True
+    )
+    w = eigvalsh_tridiag(d, e)
+    VT = eigvecs_inverse_iteration(d, e, w)
+    V = _backtransform(refl, VT)
+    return w, V
+
+
+def eigvalsh(A: jax.Array, **kw) -> jax.Array:
+    return eigh(A, eigenvectors=False, **kw)
+
+
+def eigh_batched(A: jax.Array, **kw):
+    """eigh over a batch of matrices (..., n, n) via vmap."""
+    batch_shape = A.shape[:-2]
+    n = A.shape[-1]
+    flat = A.reshape((-1, n, n))
+    w, V = jax.vmap(lambda M: eigh(M, **kw))(flat)
+    return w.reshape(batch_shape + (n,)), V.reshape(batch_shape + (n, n))
+
+
+@partial(jax.jit, static_argnames=("p", "method", "b", "nb"))
+def inverse_pth_root(
+    A: jax.Array,
+    p: int,
+    *,
+    eps: float = 1e-6,
+    method: str = "two_stage",
+    b: Optional[int] = None,
+    nb: Optional[int] = None,
+) -> jax.Array:
+    """A^{-1/p} for symmetric PSD A — the Shampoo preconditioner kernel.
+
+    Eigenvalues are ridged by ``eps * max(w)`` before the root, matching
+    distributed-Shampoo practice.
+    """
+    w, V = eigh(A, method=method, b=b, nb=nb, eigenvectors=True)
+    wmax = jnp.maximum(jnp.max(w), 0.0)
+    ridge = eps * jnp.maximum(wmax, 1e-30)
+    w_safe = jnp.maximum(w, 0.0) + ridge
+    root = jnp.power(w_safe, -1.0 / p)
+    return (V * root[None, :]) @ V.T

@@ -1,0 +1,141 @@
+"""Householder reflector utilities (LAPACK-style, branchless for JAX).
+
+A reflector H = I - tau * v v^T with v[0] = 1 maps a vector x to
+(beta, 0, ..., 0)^T.  These helpers are the scalar building blocks of the
+panel QR factorization, the band reduction stages and bulge chasing.
+
+Everything here is shape-static and `vmap`/`jit` friendly: no data-dependent
+Python control flow, degenerate inputs (zero tails) produce tau == 0, i.e.
+H == I, so masked/padded lanes are free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "house",
+    "house_masked",
+    "apply_house_left",
+    "apply_house_right",
+    "apply_house_both",
+    "larft",
+    "wy_apply_left",
+    "wy_apply_right",
+]
+
+
+def house(x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Compute a Householder reflector for vector ``x``.
+
+    Returns ``(v, tau, beta)`` with ``v[0] == 1`` such that
+    ``(I - tau v v^T) x = beta * e1``.
+
+    Degenerate case: if ``x[1:] == 0`` then ``tau == 0`` and ``beta == x[0]``
+    (H is the identity), so padded zero vectors are a no-op.
+    """
+    dtype = x.dtype
+    alpha = x[0]
+    tail = x[1:]
+    sigma = jnp.sum(tail * tail)
+
+    # mu = ||x||_2, computed stably enough for fp32 use here.
+    mu = jnp.sqrt(alpha * alpha + sigma)
+
+    # Convention: H x = +mu * e1, so v0 = alpha - mu.  For alpha > 0 that
+    # difference cancels; rewrite as -sigma / (alpha + mu) (exact identity).
+    safe_denom = jnp.where(alpha + mu == 0, jnp.ones((), dtype), alpha + mu)
+    v0 = jnp.where(alpha <= 0, alpha - mu, -sigma / safe_denom)
+
+    degenerate = sigma == 0
+    v0_safe = jnp.where(degenerate, jnp.ones((), dtype), v0)
+
+    tau = jnp.where(
+        degenerate,
+        jnp.zeros((), dtype),
+        2.0 * v0_safe * v0_safe / (sigma + v0_safe * v0_safe),
+    )
+    beta = jnp.where(degenerate, alpha, mu)
+
+    v_tail = jnp.where(degenerate, jnp.zeros_like(tail), tail / v0_safe)
+    v = jnp.concatenate([jnp.ones((1,), dtype), v_tail])
+    return v, tau, beta
+
+
+def house_masked(x: jax.Array, mask: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``house`` over a masked vector: entries where ``mask`` is False are
+    treated as exact zeros (used for ragged windows in bulge chasing)."""
+    x = jnp.where(mask, x, 0.0)
+    v, tau, beta = house(x)
+    v = jnp.where(mask, v, 0.0)
+    # Keep v[0] = 1 semantics only if the head element is live.
+    head_live = mask[0]
+    tau = jnp.where(head_live, tau, 0.0)
+    beta = jnp.where(head_live, beta, x[0])
+    return v, tau, beta
+
+
+def apply_house_left(M: jax.Array, v: jax.Array, tau: jax.Array) -> jax.Array:
+    """(I - tau v v^T) @ M  -- v applies to the rows of M."""
+    w = v @ M  # (cols,)
+    return M - tau * jnp.outer(v, w)
+
+
+def apply_house_right(M: jax.Array, v: jax.Array, tau: jax.Array) -> jax.Array:
+    """M @ (I - tau v v^T) -- v applies to the columns of M."""
+    w = M @ v  # (rows,)
+    return M - tau * jnp.outer(w, v)
+
+
+def apply_house_both(M: jax.Array, v: jax.Array, tau: jax.Array) -> jax.Array:
+    """(I - tau v v^T) M (I - tau v v^T) for symmetric M (two-sided update).
+
+    Uses the symmetric rank-2 formulation:
+        w = tau * (M v - (tau/2) (v^T M v) v)
+        M <- M - v w^T - w v^T
+    which preserves symmetry exactly (up to rounding).
+    """
+    Mv = M @ v
+    vMv = v @ Mv
+    w = tau * (Mv - 0.5 * tau * vMv * v)
+    return M - jnp.outer(v, w) - jnp.outer(w, v)
+
+
+def larft(V: jax.Array, taus: jax.Array) -> jax.Array:
+    """Form the upper-triangular block-reflector factor T (LAPACK ``larft``).
+
+    Given ``V`` (m, k) with unit lower-trapezoidal structure (column j is the
+    j-th Householder vector, zeros above its support, V[j, j] == 1) and taus
+    (k,), returns T (k, k) upper triangular such that
+
+        Q = H_1 H_2 ... H_k = I - V T V^T.
+
+    Implemented as a scan over columns (k is static and small: the panel
+    width), each step does one (k, m) @ (m,) matvec.
+    """
+    m, k = V.shape
+    VtV = V.T @ V  # (k, k); VtV[i, j] = v_i . v_j
+
+    def body(T, j):
+        # T[:, j] = -tau_j * T[:, :j] @ VtV[:j, j]; T[j, j] = tau_j
+        col_mask = jnp.arange(k) < j  # strictly-before columns
+        rhs = jnp.where(col_mask, VtV[:, j], 0.0)
+        tcol = -taus[j] * (T @ rhs)
+        tcol = jnp.where(col_mask, tcol, 0.0)
+        tcol = tcol.at[j].set(taus[j])
+        T = T.at[:, j].set(tcol)
+        return T, None
+
+    T0 = jnp.zeros((k, k), V.dtype)
+    T, _ = jax.lax.scan(body, T0, jnp.arange(k))
+    return T
+
+
+def wy_apply_left(M: jax.Array, V: jax.Array, T: jax.Array) -> jax.Array:
+    """Q^T @ M with Q = I - V T V^T  =>  M - V T^T V^T M."""
+    return M - V @ (T.T @ (V.T @ M))
+
+
+def wy_apply_right(M: jax.Array, V: jax.Array, T: jax.Array) -> jax.Array:
+    """M @ Q with Q = I - V T V^T  =>  M - (M V) T V^T."""
+    return M - (M @ V) @ (T @ V.T)

@@ -1,0 +1,197 @@
+"""Eigensolvers for symmetric tridiagonal matrices.
+
+The paper hands the tridiagonal matrix to cuSOLVER's iterative methods (QR /
+divide-and-conquer).  On TPU the natural massively-parallel iterative method
+is **Sturm-sequence bisection** (related-work §7.2.2 of the paper): every
+eigenvalue is an independent lane, so the whole spectrum converges in ~40
+batched scans — no sequential deflation like the QR algorithm.  Eigenvectors
+come from **pivoted inverse iteration** (one independent tridiagonal solve
+per eigenvalue, vmapped) followed by a QR polish that re-orthogonalizes
+clustered eigenvectors.
+
+All routines are shape-static, jit- and vmap-friendly.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "sturm_count",
+    "eigvalsh_tridiag",
+    "eigvecs_inverse_iteration",
+    "eigh_tridiag",
+]
+
+
+def sturm_count(d: jax.Array, e: jax.Array, x: jax.Array) -> jax.Array:
+    """Number of eigenvalues of tridiag(d, e) strictly below each x.
+
+    d: (n,) diagonal; e: (n-1,) subdiagonal; x: (m,) query points.
+    Returns (m,) int32 counts.  Uses the safeguarded LDL^T sign-count
+    recurrence (LAPACK dstebz style).
+    """
+    n = d.shape[0]
+    m = x.shape[0]
+    e2 = jnp.concatenate([jnp.zeros((1,), d.dtype), e * e])  # e2[i] = e_{i-1}^2
+    eps = jnp.finfo(d.dtype).tiny
+    pivmin = jnp.maximum(jnp.max(e2) * eps, eps)
+
+    def body(carry, de):
+        q_prev, count = carry
+        d_i, e2_i = de
+        q = (d_i - x) - e2_i / q_prev
+        q = jnp.where(jnp.abs(q) < pivmin, -pivmin, q)
+        count = count + (q < 0).astype(jnp.int32)
+        return (q, count), None
+
+    q0 = jnp.full((m,), 1.0, d.dtype)
+    (q, count), _ = lax.scan(body, (q0, jnp.zeros((m,), jnp.int32)), (d, e2))
+    return count
+
+
+@partial(jax.jit, static_argnames=("max_iter",))
+def eigvalsh_tridiag(d: jax.Array, e: jax.Array, max_iter: int = 48) -> jax.Array:
+    """All eigenvalues of tridiag(d, e), ascending, via parallel bisection."""
+    n = d.shape[0]
+    e_abs = jnp.concatenate([jnp.zeros((1,), d.dtype), jnp.abs(e)])
+    r = e_abs + jnp.concatenate([jnp.abs(e), jnp.zeros((1,), d.dtype)])
+    lo0 = jnp.min(d - r)
+    hi0 = jnp.max(d + r)
+    span = jnp.maximum(hi0 - lo0, jnp.finfo(d.dtype).eps)
+    lo0 = lo0 - 0.001 * span
+    hi0 = hi0 + 0.001 * span
+
+    ks = jnp.arange(n, dtype=jnp.int32)
+    lo = jnp.full((n,), lo0, d.dtype)
+    hi = jnp.full((n,), hi0, d.dtype)
+
+    def body(carry, _):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = sturm_count(d, e, mid)
+        go_up = cnt <= ks  # lambda_k >= mid
+        lo = jnp.where(go_up, mid, lo)
+        hi = jnp.where(go_up, hi, mid)
+        return (lo, hi), None
+
+    (lo, hi), _ = lax.scan(body, (lo, hi), None, length=max_iter)
+    return 0.5 * (lo + hi)
+
+
+def _tridiag_solve_pivoted(dl: jax.Array, d: jax.Array, du: jax.Array, rhs: jax.Array):
+    """Solve a (possibly nearly singular) tridiagonal system with partial
+    pivoting (Gaussian elimination, dgtsv-style), shape-static via two scans.
+
+    dl: (n-1,) subdiagonal; d: (n,) diagonal; du: (n-1,) superdiagonal.
+    """
+    n = d.shape[0]
+    dtype = d.dtype
+    tiny = jnp.finfo(dtype).tiny * 16
+
+    a_next = jnp.concatenate([dl, jnp.zeros((1,), dtype)])  # a_next[i] = A[i+1, i]
+    b_next = jnp.concatenate([d[1:], jnp.zeros((1,), dtype)])
+    c_next = jnp.concatenate([du[1:], jnp.zeros((2,), dtype)])  # A[i+1, i+2]
+    r_next = jnp.concatenate([rhs[1:], jnp.zeros((1,), dtype)])
+    c_cur0 = jnp.concatenate([du, jnp.zeros((1,), dtype)])
+
+    def fwd(carry, row):
+        b_cur, c_cur, r_cur = carry
+        a_n, b_n, c_n, r_n = row
+        swap = jnp.abs(a_n) > jnp.abs(b_cur)
+        # pivot row (goes to output), in columns (i, i+1, i+2)
+        p1 = jnp.where(swap, a_n, b_cur)
+        p2 = jnp.where(swap, b_n, c_cur)
+        p3 = jnp.where(swap, c_n, 0.0)
+        pr = jnp.where(swap, r_n, r_cur)
+        # eliminated row, columns (i, i+1, i+2)
+        e1 = jnp.where(swap, b_cur, a_n)
+        e2 = jnp.where(swap, c_cur, b_n)
+        e3 = jnp.where(swap, 0.0, c_n)
+        er = jnp.where(swap, r_cur, r_n)
+        p1_safe = jnp.where(jnp.abs(p1) < tiny, jnp.where(p1 < 0, -tiny, tiny), p1)
+        mfac = e1 / p1_safe
+        nb = e2 - mfac * p2
+        nc = e3 - mfac * p3
+        nr = er - mfac * pr
+        return (nb, nc, nr), (p1_safe, p2, p3, pr)
+
+    (b_last, _c_last, r_last), rows = lax.scan(
+        fwd, (d[0], c_cur0[0], rhs[0]), (a_next[:-1], b_next[:-1], c_next[:-1], r_next[:-1])
+    ) if n > 1 else ((d[0], 0.0, rhs[0]), tuple(jnp.zeros((0,), dtype) for _ in range(4)))
+
+    u1, u2, u3, ur = rows
+    b_safe = jnp.where(jnp.abs(b_last) < tiny, jnp.where(b_last < 0, -tiny, tiny), b_last)
+    x_last = r_last / b_safe
+
+    def bwd(carry, row):
+        x1, x2 = carry  # x_{i+1}, x_{i+2}
+        p1, p2, p3, pr = row
+        x0 = (pr - p2 * x1 - p3 * x2) / p1
+        return (x0, x1), x0
+
+    if n > 1:
+        (_, _), xs = lax.scan(bwd, (x_last, jnp.zeros((), dtype)), (u1, u2, u3, ur), reverse=True)
+        x = jnp.concatenate([xs, x_last[None]])
+    else:
+        x = x_last[None]
+    return x
+
+
+@partial(jax.jit, static_argnames=("n_iter",))
+def eigvecs_inverse_iteration(
+    d: jax.Array, e: jax.Array, lams: jax.Array, n_iter: int = 3
+) -> jax.Array:
+    """Eigenvectors of tridiag(d, e) for precomputed eigenvalues ``lams``.
+
+    One vmapped inverse-iteration lane per eigenvalue; a final thin-QR pass
+    re-orthogonalizes clustered vectors (columns arrive eigenvalue-sorted, so
+    Gram–Schmidt only mixes near-degenerate neighbours).  Returns (n, n) with
+    column k the eigenvector for lams[k].
+    """
+    n = d.shape[0]
+    dtype = d.dtype
+    # Deterministic, sign-varied start vector (same for all lanes).
+    i = jnp.arange(n, dtype=dtype)
+    v0 = jnp.cos(17.0 * (i + 1.0)) + 0.5  # dense, no hidden symmetry
+    v0 = v0 / jnp.linalg.norm(v0)
+    # Tiny eigenvalue perturbation splits exactly-repeated shifts.
+    ulp = jnp.finfo(dtype).eps
+    scale = jnp.maximum(jnp.max(jnp.abs(lams)), 1.0)
+    lams_p = lams + (jnp.arange(n, dtype=dtype) - n / 2) * (8 * ulp) * scale
+
+    def one_vec(lam):
+        def body(v, _):
+            x = _tridiag_solve_pivoted(e, d - lam, e, v)
+            nrm = jnp.linalg.norm(x)
+            x = x / jnp.maximum(nrm, jnp.finfo(dtype).tiny)
+            return x, None
+
+        v, _ = lax.scan(body, v0, None, length=n_iter)
+        return v
+
+    V = jax.vmap(one_vec)(lams_p).T  # (n, n) columns are eigenvectors
+    # QR polish for clusters; fix column signs to keep eigenvector direction.
+    Q, R = jnp.linalg.qr(V)
+    signs = jnp.sign(jnp.diagonal(R))
+    signs = jnp.where(signs == 0, 1.0, signs)
+    return Q * signs[None, :]
+
+
+@partial(jax.jit, static_argnames=("eigenvectors", "max_iter"))
+def eigh_tridiag(
+    d: jax.Array,
+    e: jax.Array,
+    *,
+    eigenvectors: bool = True,
+    max_iter: int = 48,
+):
+    """Full symmetric tridiagonal eigendecomposition (ascending)."""
+    lams = eigvalsh_tridiag(d, e, max_iter=max_iter)
+    if not eigenvectors:
+        return lams
+    V = eigvecs_inverse_iteration(d, e, lams)
+    return lams, V

@@ -1,0 +1,4 @@
+"""repro.data — deterministic synthetic token pipeline."""
+from .pipeline import DataConfig, synthetic_batch, host_batches, batch_for
+
+__all__ = ["DataConfig", "synthetic_batch", "host_batches", "batch_for"]

@@ -1,0 +1,77 @@
+"""Deterministic, stateless synthetic data pipeline.
+
+Batches are a pure function of (seed, step) — threefry counter-based — so:
+* restart/elastic-resume replays the exact stream from any step (fault
+  tolerance needs no data-loader state in checkpoints);
+* batches can be generated DEVICE-SIDE inside the train step (no host->HBM
+  transfer on the critical path), already sharded by GSPMD.
+
+The "corpus" is a mixture of structured streams (copy runs, arithmetic-mod
+sequences, Zipfian noise) so models actually have something learnable —
+loss curves in the examples are meaningful, not flat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DataConfig", "synthetic_batch", "host_batches", "batch_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    frontend_dim: int = 0  # > 0: emit precomputed frame/patch embeddings
+
+
+def synthetic_batch(dc: DataConfig, step: jax.Array):
+    """Device-side batch for ``step``.  Returns dict(tokens, labels[, embeds])."""
+    key = jax.random.fold_in(jax.random.PRNGKey(dc.seed), step)
+    B, S, V = dc.global_batch, dc.seq_len, dc.vocab
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    # Stream A: repeated runs (copy structure).
+    run_tok = jax.random.randint(k1, (B, S // 8 + 1), 0, V)
+    runs = jnp.repeat(run_tok, 8, axis=1)[:, :S]
+    # Stream B: arithmetic progression mod V (positional structure).
+    start = jax.random.randint(k2, (B, 1), 0, V)
+    stride = jax.random.randint(k3, (B, 1), 1, 7)
+    arith = (start + stride * jnp.arange(S)[None, :]) % V
+    # Stream C: Zipf-ish noise via squared uniform.
+    u = jax.random.uniform(k4, (B, S))
+    noise = jnp.minimum((u * u * V).astype(jnp.int32), V - 1)
+
+    sel = jax.random.randint(jax.random.fold_in(key, 99), (B, 1), 0, 3)
+    tokens = jnp.where(sel == 0, runs, jnp.where(sel == 1, arith, noise))
+    tokens = tokens.astype(jnp.int32)
+    # Next-token targets; last position wraps (masked out by loss weight).
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    batch = {"tokens": tokens, "labels": labels}
+    if dc.frontend_dim:
+        ke = jax.random.fold_in(key, 7)
+        batch["embeds"] = jax.random.normal(
+            ke, (B, S, dc.frontend_dim), jnp.bfloat16
+        )
+    return batch
+
+
+def batch_for(dc: DataConfig, step: int):
+    """Host-side convenience (numpy) — same stream as synthetic_batch."""
+    return jax.tree_util.tree_map(
+        np.asarray, synthetic_batch(dc, jnp.asarray(step, jnp.int32))
+    )
+
+
+def host_batches(dc: DataConfig, start_step: int = 0) -> Iterator[dict]:
+    """Resumable host iterator (start_step = checkpointed step)."""
+    step = start_step
+    while True:
+        yield batch_for(dc, step)
+        step += 1

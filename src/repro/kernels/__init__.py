@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  syr2k   — lower-triangular-tile symmetric rank-2k update (paper §5.2)
+  bulge   — VMEM-resident wavefront bulge chasing (paper §4.2/§5.3)
+  panel   — fused Householder panel QR in WY form (paper §5.1 panel factor)
+
+Use via ``repro.kernels.ops``; oracles in ``repro.kernels.ref``.
+Kernels execute with ``interpret=True`` on CPU (validation) and compile on
+real TPUs.
+"""
+from .ops import syr2k, trailing_update, bulge_chase, panel_qr, use_interpret
+
+__all__ = ["syr2k", "trailing_update", "bulge_chase", "panel_qr", "use_interpret"]

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: wavefront bulge chasing (the paper's §4.2/§5.3).
+
+The GPU implementation keeps two shared-memory blocks per sweep and
+spin-locks between thread blocks.  The TPU translation (DESIGN.md §2) holds
+the ENTIRE padded matrix in VMEM (the working set of bulge chasing is the
+band — small by construction: the paper's whole point is b ≪ n) and walks
+the static wavefront schedule as the Pallas grid:
+
+* grid = (num_wavefronts,)  — sequential ("arbitrary") dimension; the output
+  block index is constant, so the matrix stays resident in VMEM across all
+  wavefronts and is written back to HBM once at the end.  This is the
+  paper's "hide the data movement" taken to its limit: one load, one store.
+* within a grid step, a fori loop over the active sweep slots applies each
+  3b x 3b two-sided Householder window update in place (dynamic VMEM
+  slices).  Masked slots are routed to a zero scratch corner and degenerate
+  to tau = 0 no-ops, so the schedule needs no branches.
+
+VMEM budget: (n + 6b)^2 * 4 bytes — n <= ~1500 fp32 on a 16 MB VMEM core,
+which covers the Shampoo preconditioner blocks this framework runs the
+solver on (<= 1024).  Larger matrices fall back to the XLA wavefront
+executor in ``repro.core.bulge_chasing`` (HBM-resident).
+
+Eigenvector logs are not emitted by the kernel (values-only fast path); the
+eigenvector path uses the XLA executor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.bulge_chasing import _pad_sizes, num_wavefronts, max_active_sweeps
+
+__all__ = ["bulge_chase_pallas"]
+
+
+def _window_update(W: jax.Array, is_first, b: int):
+    """Two-sided Householder update of a (3b, 3b) window.
+
+    The eliminated column is local ``b-1`` for sweep-start ops and ``0`` for
+    chase ops — selected, not indexed, so no dynamic gather is needed.
+    """
+    w3 = 3 * b
+    dtype = W.dtype
+    li = lax.broadcasted_iota(jnp.int32, (w3,), 0)
+
+    col = jnp.where(is_first, W[:, b - 1], W[:, 0])
+    in_rows = (li >= b) & (li < 2 * b)
+    x = jnp.where(in_rows, col, 0.0)
+
+    # house(x) with the pivot at local row b.
+    alpha = jnp.sum(jnp.where(li == b, x, 0.0))
+    sigma = jnp.sum(jnp.where(li > b, x * x, 0.0))
+    mu = jnp.sqrt(alpha * alpha + sigma)
+    safe_denom = jnp.where(alpha + mu == 0, jnp.ones((), dtype), alpha + mu)
+    v0 = jnp.where(alpha <= 0, alpha - mu, -sigma / safe_denom)
+    degenerate = sigma == 0
+    v0_safe = jnp.where(degenerate, jnp.ones((), dtype), v0)
+    tau = jnp.where(degenerate, 0.0, 2.0 * v0_safe * v0_safe / (sigma + v0_safe * v0_safe))
+    beta = jnp.where(degenerate, alpha, mu)
+    u = jnp.where(li == b, 1.0, jnp.where(li > b, x / v0_safe, 0.0))
+    u = jnp.where(in_rows, u, 0.0)
+
+    # Symmetric two-sided rank-2 form.
+    Mv = W @ u
+    vMv = u @ Mv
+    wvec = tau * (Mv - 0.5 * tau * vMv * u)
+    Wn = W - jnp.outer(u, wvec) - jnp.outer(wvec, u)
+
+    # Exact zeros in the eliminated column/row.
+    col_mask = jnp.where(is_first, li == b - 1, li == 0)
+    exact = jnp.where(li == b, beta, 0.0)
+    m2 = in_rows[:, None] & col_mask[None, :]
+    Wn = jnp.where(m2, exact[:, None], Wn)
+    Wn = jnp.where(m2.T, exact[None, :], Wn)
+    return Wn
+
+
+def _bulge_kernel(bin_ref, bout_ref, *, n: int, b: int, A: int, off: int, scratch0: int):
+    w = pl.program_id(0)
+    w3 = 3 * b
+
+    @pl.when(w == 0)
+    def _copy_in():
+        bout_ref[...] = bin_ref[...]
+
+    def slot_body(a, carry):
+        s = w // 3 - a
+        k = w - 3 * s
+        kmax_s = (n - 3 - jnp.clip(s, 0, n - 3)) // b
+        active = (s >= 0) & (s <= n - 3) & (k >= 0) & (k <= kmax_s)
+        r0 = jnp.where(active, off + s + 1 + (k - 1) * b, scratch0)
+        W = bout_ref[pl.ds(r0, w3), pl.ds(r0, w3)]
+        Wn = _window_update(W, k == 0, b)
+        bout_ref[pl.ds(r0, w3), pl.ds(r0, w3)] = Wn
+        return carry
+
+    lax.fori_loop(0, A, slot_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "interpret"))
+def bulge_chase_pallas(B: jax.Array, b: int, *, interpret: bool = False) -> jax.Array:
+    """Band (dense storage, bandwidth b) -> tridiagonal, VMEM-resident.
+
+    Matches ``repro.core.chase_wavefront`` / ``chase_sequential`` bitwise up
+    to float rounding.  Values-only (no eigenvector log).
+    """
+    n = B.shape[0]
+    if n < 3 or b <= 1:
+        return B
+    off, scratch0, total = _pad_sizes(n, b)
+    A = max_active_sweeps(n, b)
+    W_total = num_wavefronts(n, b)
+
+    Bp = jnp.zeros((total, total), B.dtype)
+    Bp = lax.dynamic_update_slice(Bp, B, (off, off))
+
+    kernel = functools.partial(
+        _bulge_kernel, n=n, b=b, A=A, off=off, scratch0=scratch0
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(W_total,),
+        in_specs=[pl.BlockSpec((total, total), lambda w: (0, 0))],
+        out_specs=pl.BlockSpec((total, total), lambda w: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((total, total), B.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.ARBITRARY,),
+        ),
+        interpret=interpret,
+        name="bulge_chase_wavefront",
+    )(Bp)
+    return lax.dynamic_slice(out, (off, off), (n, n))

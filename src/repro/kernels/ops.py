@@ -1,0 +1,109 @@
+"""jit-facing wrappers around the Pallas kernels.
+
+Responsibilities:
+* interpret-mode dispatch: on CPU backends the kernels execute with
+  ``interpret=True`` (the brief's validation mode); on TPU they compile.
+* shape normalization: pad to tile multiples, slice back.
+* symmetrization: the syr2k kernel writes lower tiles only; wrappers
+  reconstruct the full symmetric result.
+
+These are the functions the rest of the framework imports; nothing outside
+``repro.kernels`` calls ``pl.pallas_call`` directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .syr2k import syr2k_lower_pallas
+from .bulge import bulge_chase_pallas
+from .panel import panel_qr_pallas
+
+__all__ = [
+    "use_interpret",
+    "syr2k",
+    "trailing_update",
+    "bulge_chase",
+    "panel_qr",
+    "BULGE_VMEM_MAX_N",
+]
+
+# fp32 VMEM ceiling for the VMEM-resident bulge kernel (see kernels/bulge.py).
+BULGE_VMEM_MAX_N = 1408
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode: on for CPU (validation), off on real TPUs."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def _pick_tile(n: int, pref: int) -> int:
+    """Largest power-of-two tile <= pref that keeps padding waste < 2x."""
+    t = pref
+    while t > 8 and n % t and (n % t) < t // 2 and n < t:
+        t //= 2
+    return max(min(t, pref), 8)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "bm", "bk", "interpret"))
+def syr2k(
+    A: jax.Array,
+    B: jax.Array,
+    C: Optional[jax.Array] = None,
+    *,
+    alpha: float = 1.0,
+    bm: int = 256,
+    bk: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Full symmetric ``C + alpha (A B^T + B A^T)`` via the lower-tile kernel."""
+    interpret = use_interpret() if interpret is None else interpret
+    n, k = A.shape
+    bm = min(bm, max(8, 1 << (n - 1).bit_length()))
+    bk = min(bk, max(8, 1 << (k - 1).bit_length()))
+    C_in = jnp.zeros((n, n), A.dtype) if C is None else C
+    Ap = _pad_to(A, bm, bk)
+    Bp = _pad_to(B, bm, bk)
+    Cp = _pad_to(C_in, bm, bm)
+    low = syr2k_lower_pallas(Ap, Bp, Cp, alpha=alpha, bm=bm, bk=bk, interpret=interpret)
+    low = low[:n, :n]
+    # Symmetrize from the lower triangle only (upper tiles are undefined).
+    full = jnp.tril(low) + jnp.tril(low, -1).T
+    return full
+
+
+def trailing_update(
+    C: jax.Array, Y: jax.Array, Z: jax.Array, **kw
+) -> jax.Array:
+    """The DBR trailing update ``C - Z Y^T - Y Z^T`` (paper Alg. 1 line 10),
+    fused into one syr2k kernel invocation with alpha = -1."""
+    return syr2k(Z, Y, C, alpha=-1.0, **kw)
+
+
+def bulge_chase(B: jax.Array, b: int, *, interpret: Optional[bool] = None) -> jax.Array:
+    """Band -> tridiagonal via the VMEM-resident wavefront kernel; falls back
+    to the XLA wavefront executor above the VMEM ceiling."""
+    interpret = use_interpret() if interpret is None else interpret
+    n = B.shape[0]
+    if n > BULGE_VMEM_MAX_N:
+        from repro.core.bulge_chasing import chase_wavefront
+
+        return chase_wavefront(B, b)
+    return bulge_chase_pallas(B, b, interpret=interpret)
+
+
+def panel_qr(panel: jax.Array, *, interpret: Optional[bool] = None):
+    """Fused panel QR (V, T, taus, R)."""
+    interpret = use_interpret() if interpret is None else interpret
+    return panel_qr_pallas(panel, interpret=interpret)

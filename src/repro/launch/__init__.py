@@ -1,0 +1,8 @@
+"""repro.launch — meshes, input specs, dry-run, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS at import; import it only in a
+fresh process (run as ``python -m repro.launch.dryrun``).
+"""
+from .mesh import make_production_mesh, make_local_mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh"]

@@ -1,0 +1,60 @@
+"""PartitionSpecs for decode caches (mirrors models.lm.cache_meta)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["cache_partition_specs"]
+
+
+def cache_partition_specs(cfg, mesh, policy, cache_tree):
+    """Shardings for a cache pytree: batch on DP axes; KV heads / SSM heads /
+    LRU width on the model axis where the policy shards them."""
+    dp_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp_total = 1
+    for a in dp_axes:
+        dp_total *= mesh.shape[a]
+    kv_rule = policy.activation_rules.get("act_kv_heads")
+
+    def _key(entry) -> str:
+        return getattr(entry, "key", None) or getattr(entry, "name", None) or str(entry)
+
+    def spec_for(path, s):
+        name = _key(path[-1])
+        ndim = len(s.shape)
+        stacked = 1 if any(_key(k) == "units" for k in path) else 0
+        # batch dim is right after the optional layer-stack dim; tiny decode
+        # batches (long_500k has B=1) replicate instead of sharding on DP.
+        batch_size = s.shape[stacked] if ndim > stacked else 1
+        dp = dp_axes if batch_size % dp_total == 0 else None
+        lead = (None,) * stacked
+        if "pos" in name:
+            return P()
+        if name in ("k", "v"):
+            # (L?, B, W, hkv, hd).  When KV heads can't shard on the model
+            # axis (narrow GQA/MQA), shard the cache WINDOW dim instead —
+            # decode context parallelism: each model shard scores its slice
+            # of keys; GSPMD reduces the per-head softmax stats (tiny).
+            w_rule = "model" if kv_rule is None else None
+            return P(*lead, dp, w_rule, kv_rule, None)
+        if name == "state":
+            # (L?, B, h, n, P)
+            return P(*lead, dp, "model", None, None)
+        if name == "conv":
+            # (L?, B, w, ch)
+            return P(*lead, dp, None, "model")
+        if name == "h":
+            # (L?, B, w)
+            return P(*lead, dp, "model")
+        return P(*((None,) * ndim))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = []
+    for path, s in flat:
+        sp = spec_for(path, s)
+        # Trim/pad spec to rank.
+        entries = list(sp)
+        entries = entries[: len(s.shape)]
+        entries += [None] * (len(s.shape) - len(entries))
+        out.append(NamedSharding(mesh, P(*entries)))
+    return jax.tree_util.tree_unflatten(treedef, out)

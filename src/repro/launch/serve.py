@@ -1,0 +1,73 @@
+"""Batched serving driver: prefill + iterative decode over a request batch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+
+Demonstrates the serve path (the decode_* / long_* dry-run shapes) on local
+devices: a continuous batch of synthetic prompts is prefetched through the
+model (teacher-forced prefill populates caches via decode steps), then new
+tokens are generated greedily.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.models import model_params, cache_init
+    from repro.train import make_serve_step
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = model_params(cfg, key, model_axis=1)
+
+    max_len = args.prompt_len + args.gen
+    cache = cache_init(cfg, args.batch, max_len)
+    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    prompts = jax.random.randint(
+        jax.random.fold_in(key, 1), (args.batch, args.prompt_len), 0, cfg.vocab
+    ).astype(jnp.int32)
+
+    # Prefill by teacher-forced decode steps (cache-populating).
+    t0 = time.perf_counter()
+    tok = prompts[:, 0:1]
+    for t in range(args.prompt_len):
+        nxt, cache = serve_step(params, cache, prompts[:, t : t + 1])
+    t_prefill = time.perf_counter() - t0
+
+    # Greedy generation.
+    generated = []
+    tok = nxt[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    for _ in range(args.gen):
+        nxt, cache = serve_step(params, cache, tok)
+        tok = nxt[:, None].astype(jnp.int32)
+        generated.append(nxt)
+    jax.block_until_ready(nxt)
+    t_gen = time.perf_counter() - t0
+
+    out = jnp.stack(generated, axis=1)
+    print(f"[serve] {cfg.name}: batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
+    print(f"[serve] prefill {t_prefill*1e3:.1f} ms, "
+          f"decode {t_gen/args.gen*1e3:.2f} ms/token/batch")
+    print("[serve] sample generations:", out[:2].tolist())
+    return out
+
+
+if __name__ == "__main__":
+    main()

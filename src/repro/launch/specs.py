@@ -1,0 +1,102 @@
+"""Input ShapeDtypeStructs for every (architecture x shape) dry-run cell.
+
+Shapes (assigned, LM family):
+    train_4k     seq 4096    global_batch 256   -> train_step
+    prefill_32k  seq 32768   global_batch 32    -> prefill
+    decode_32k   seq 32768   global_batch 128   -> serve_step (1 new token)
+    long_500k    seq 524288  global_batch 1     -> serve_step (1 new token)
+
+``long_500k`` runs only for the sub-quadratic-serving archs (SSM / hybrid /
+SWA); pure full-attention archs skip it (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import canonical, get_config
+from repro.models import ModelConfig, abstract_params, cache_meta, model_meta
+
+__all__ = ["SHAPES", "LONG_CONTEXT_ARCHS", "cell_applicable", "input_specs", "all_cells"]
+
+SHAPES: Dict[str, dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# Sub-quadratic serving state: SSM state / RG-LRU + local window / SWA ring.
+LONG_CONTEXT_ARCHS = {"mamba2_370m", "recurrentgemma_2b", "mixtral_8x7b"}
+
+
+def cell_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return canonical(arch) in LONG_CONTEXT_ARCHS
+    return True
+
+
+def all_cells():
+    from repro.configs import ARCHS
+
+    for arch in ARCHS:
+        for shape in SHAPES:
+            yield arch, shape, cell_applicable(arch, shape)
+
+
+def batch_specs(cfg: ModelConfig, seq: int, batch: int, *, train: bool) -> dict:
+    specs = {}
+    if cfg.frontend:
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (batch, seq, cfg.frontend_dim), jnp.bfloat16
+        )
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if train:
+        specs["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        if cfg.frontend:
+            specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return specs
+
+
+def input_specs(
+    arch: str,
+    shape: str,
+    *,
+    optimizer=None,
+    model_axis: int = 16,
+    cfg: Optional[ModelConfig] = None,
+) -> dict:
+    """Abstract inputs for the step function of this cell.
+
+    train  -> {params, opt_state, batch, step}
+    prefill-> {params, batch}
+    decode -> {params, cache, tokens}
+    """
+    cfg = cfg or get_config(arch)
+    info = SHAPES[shape]
+    meta = model_meta(cfg, model_axis)
+    params = abstract_params(meta)
+    if info["kind"] == "train":
+        out = {
+            "params": params,
+            "batch": batch_specs(cfg, info["seq"], info["batch"], train=True),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        if optimizer is not None:
+            out["opt_state"] = jax.eval_shape(optimizer.init, params)
+        return out
+    if info["kind"] == "prefill":
+        return {
+            "params": params,
+            "batch": batch_specs(cfg, info["seq"], info["batch"], train=False),
+        }
+    # decode
+    return {
+        "params": params,
+        "cache": cache_meta(cfg, info["batch"], info["seq"]),
+        "tokens": jax.ShapeDtypeStruct((info["batch"], 1), jnp.int32),
+    }

@@ -1,0 +1,34 @@
+"""repro.models — layer zoo + LM assembly for the ten assigned archs."""
+from .config import ModelConfig
+from .params import (
+    ParamMeta,
+    abstract_params,
+    init_params,
+    partition_specs,
+    param_count,
+)
+from .lm import (
+    model_meta,
+    model_params,
+    cache_meta,
+    cache_init,
+    forward,
+    decode_step,
+    pattern_unit,
+)
+
+__all__ = [
+    "ModelConfig",
+    "ParamMeta",
+    "abstract_params",
+    "init_params",
+    "partition_specs",
+    "param_count",
+    "model_meta",
+    "model_params",
+    "cache_meta",
+    "cache_init",
+    "forward",
+    "decode_step",
+    "pattern_unit",
+]

@@ -1,0 +1,218 @@
+"""Attention: GQA/MQA/MHA with rotary, qk-norm, sliding/local windows.
+
+Training / prefill use **chunked (flash-style) attention**: an outer scan
+over query chunks and an inner scan over key/value chunks with running
+(max, sum, acc) online-softmax state — S x S logits are never materialized.
+Masked (q_chunk < kv_chunk) inner steps still execute (static schedule);
+eliminating them is a recorded §Perf optimization, not a baseline feature.
+
+Decode attends a single query against a cache.  Full-attention layers keep
+an S_max cache; sliding-window (mixtral) and local-attention (recurrent-
+gemma) layers keep a ring buffer of window size — this is what makes the
+``long_500k`` serving shape O(window) for the hybrid/SWA architectures.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .flash import flash_attention
+from .layers import ParamMeta, apply_norm, apply_rotary, rmsnorm_meta, rotary_cos_sin
+from repro.parallel.hints import shard_hint
+
+NEG_INF = -1e30
+
+
+def attention_meta(cfg: ModelConfig, pdtype, *, window: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    meta = {
+        "wq": ParamMeta((d, hq, hd), pdtype, ("embed", "q_heads", "head_dim")),
+        "wk": ParamMeta((d, hkv, hd), pdtype, ("embed", "kv_heads", "head_dim")),
+        "wv": ParamMeta((d, hkv, hd), pdtype, ("embed", "kv_heads", "head_dim")),
+        "wo": ParamMeta((hq, hd, d), pdtype, ("q_heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        meta["bq"] = ParamMeta((hq, hd), pdtype, ("q_heads", "head_dim"), init="zeros")
+        meta["bk"] = ParamMeta((hkv, hd), pdtype, ("kv_heads", "head_dim"), init="zeros")
+        meta["bv"] = ParamMeta((hkv, hd), pdtype, ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        meta["q_norm"] = rmsnorm_meta(hd, "rmsnorm", pdtype)
+        meta["k_norm"] = rmsnorm_meta(hd, "rmsnorm", pdtype)
+    return meta
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    return q, k, v
+
+
+def _chunk_scores(q, k, softcap):
+    """q: (B, cq, Hkv, G, hd); k: (B, ck, Hkv, hd) -> (B, Hkv, G, cq, ck)."""
+    s = jnp.einsum("bqhgk,bchk->bhgqc", q, k, preferred_element_type=jnp.float32)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _window_mask(q_pos, k_pos, window: Optional[int]):
+    """Causal (+ optional sliding window) additive mask, fp32."""
+    causal = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        causal &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(causal, 0.0, NEG_INF)
+
+
+def attention_forward(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Causal self-attention over a full sequence (train / prefill).
+
+    x: (B, S, D).  ``window``: sliding/local attention width (None = full).
+
+    Flash attention (models/flash.py) with one of four shard modes
+    (``cfg.attn_shard_mode``, set by the launcher from the mesh):
+      heads   — KV heads divide the model axis: grouped-GQA layout, heads TP
+      q_heads — only Q heads divide: KV repeated to Q heads, then heads TP
+      cp      — context parallelism: query-chunk dim sharded on model
+                (archs whose head counts don't divide the axis)
+      none    — no attention TP (single device / tests)
+    """
+    B, S, D = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    mode = cfg.attn_shard_mode
+    q, k, v = _project_qkv(p, cfg, x)
+
+    pos = jnp.arange(S)
+    cos, sin = rotary_cos_sin(pos, hd, cfg.rope_theta)
+    q = apply_rotary(q, cos, sin)
+    k = apply_rotary(k, cos, sin)
+    q = q * (hd ** -0.5)
+
+    if mode == "q_heads":
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+        hkv_eff, G = hq, 1
+        kv_hint = ("act_batch", None, "act_heads", None)
+        head_hint = "act_heads"
+    elif mode == "heads":
+        hkv_eff, G = hkv, hq // hkv
+        kv_hint = ("act_batch", None, "act_kv_heads", None)
+        head_hint = "act_kv_heads"
+    else:  # cp / none
+        hkv_eff, G = hkv, hq // hkv
+        kv_hint = ("act_batch", None, None, None)
+        head_hint = None
+    k = shard_hint(k, kv_hint)
+    v = shard_hint(v, kv_hint)
+
+    cq = min(cfg.attn_chunk, S)
+    assert S % cq == 0, (S, cq)
+    nq = S // cq
+    ck = min(cfg.attn_kv_chunk, S)
+
+    q6 = q.reshape(B, nq, cq, hkv_eff, G, hd)
+    q6 = shard_hint(
+        q6,
+        (
+            "act_batch",
+            "act_q_chunks" if mode == "cp" else None,
+            None,
+            head_hint,
+            None,
+            None,
+        ),
+    )
+    o6 = flash_attention(q6, k, v, ck, window, cfg.attn_logit_softcap)
+    attn = o6.reshape(B, S, hq, hd)
+    out = jnp.einsum("bshk,hkd->bsd", attn, p["wo"].astype(x.dtype))
+    return shard_hint(out, ("act_batch", "act_res_seq", None))
+
+
+# ----------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ----------------------------------------------------------------------
+
+def attn_cache_meta(cfg: ModelConfig, batch: int, max_len: int, window: Optional[int]):
+    """Abstract cache shapes for one attention layer."""
+    W = min(window, max_len) if window else max_len
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.activation_dtype
+    return {
+        "k": jax.ShapeDtypeStruct((batch, W, hkv, hd), dt),
+        "v": jax.ShapeDtypeStruct((batch, W, hkv, hd), dt),
+    }
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int, window: Optional[int]):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        attn_cache_meta(cfg, batch, max_len, window),
+    )
+
+
+def attention_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+    *,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, dict]:
+    """One-token decode.  x: (B, 1, D); pos: scalar int32 (current index).
+
+    Returns (out (B, 1, D), updated cache).  Windowed layers use a ring
+    buffer (slot = pos % W); full layers write slot = pos.
+    """
+    B, _, D = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = hq // hkv
+    W = cache["k"].shape[1]
+
+    q, k, v = _project_qkv(p, cfg, x)
+    cos, sin = rotary_cos_sin(pos[None], hd, cfg.rope_theta)
+    q = apply_rotary(q, cos[None], sin[None])
+    k = apply_rotary(k, cos[None], sin[None])
+
+    slot = pos % W if window is not None else pos
+    ck = lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+
+    # Positions held in each cache slot (for masking; rotary already applied
+    # at write time with absolute positions).
+    slots = jnp.arange(W)
+    if window is not None:
+        # Ring buffer: slot s holds the latest position p <= pos, p % W == s.
+        slot_pos = pos - ((pos - slots) % W)
+        valid = slot_pos >= 0  # within-window is automatic for a ring buffer
+    else:
+        valid = slots <= pos
+
+    qg = (q * hd ** -0.5).reshape(B, 1, hkv, G, hd)
+    s = jnp.einsum("bqhgk,bchk->bhgqc", qg, ck, preferred_element_type=jnp.float32)
+    if cfg.attn_logit_softcap is not None:
+        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqc,bchk->bhgqk", pr.astype(cv.dtype), cv)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, 1, hq, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,128 @@
+"""Decoder block assembly: one function pair (meta/forward/decode) per kind.
+
+Kinds: "attn" (attention + FFN/MoE), "mamba2" (SSD only; d_ff == 0),
+"rglru" (RG-LRU mixer + FFN).  The block window is the sliding window for
+SWA archs (mixtral) and the local window for hybrid (recurrentgemma) attn
+layers; None means full attention.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attention_decode,
+    attention_forward,
+    attention_meta,
+    attn_cache_init,
+    attn_cache_meta,
+)
+from .config import ModelConfig
+from .layers import apply_norm, rmsnorm_meta
+from .mamba2 import mamba2_cache_meta, mamba2_decode, mamba2_forward, mamba2_meta
+from .mlp import mlp_forward, mlp_meta
+from .moe import moe_forward, moe_meta
+from .griffin import rglru_cache_meta, rglru_decode, rglru_forward, rglru_meta
+
+__all__ = [
+    "block_meta",
+    "block_forward",
+    "block_decode",
+    "block_cache_meta",
+    "block_window",
+    "ZERO_AUX",
+]
+
+ZERO_AUX = {"moe_lb": 0.0, "moe_z": 0.0}
+
+
+def block_window(cfg: ModelConfig, kind: str) -> Optional[int]:
+    if cfg.family == "hybrid" and kind == "attn":
+        return cfg.local_window
+    return cfg.sliding_window
+
+
+def block_meta(cfg: ModelConfig, kind: str, model_axis: int = 16) -> dict:
+    pd = cfg.parameter_dtype
+    meta = {"norm1": rmsnorm_meta(cfg.d_model, cfg.norm, pd)}
+    if kind == "attn":
+        meta["attn"] = attention_meta(cfg, pd)
+        meta["norm2"] = rmsnorm_meta(cfg.d_model, cfg.norm, pd)
+        if cfg.n_experts > 0:
+            meta["moe"] = moe_meta(cfg, pd, model_axis)
+        else:
+            meta["mlp"] = mlp_meta(cfg, pd)
+    elif kind == "mamba2":
+        meta["mamba"] = mamba2_meta(cfg, pd)
+    elif kind == "rglru":
+        meta["rglru"] = rglru_meta(cfg, pd)
+        meta["norm2"] = rmsnorm_meta(cfg.d_model, cfg.norm, pd)
+        meta["mlp"] = mlp_meta(cfg, pd)
+    else:
+        raise ValueError(kind)
+    return meta
+
+
+def block_forward(
+    p: dict, cfg: ModelConfig, kind: str, x: jax.Array
+) -> Tuple[jax.Array, dict]:
+    aux = dict(ZERO_AUX)
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == "attn":
+        x = x + attention_forward(p["attn"], cfg, h, window=block_window(cfg, kind))
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        if cfg.n_experts > 0:
+            y, aux = moe_forward(p["moe"], cfg, h2)
+            aux = {**ZERO_AUX, **aux}
+        else:
+            y = mlp_forward(p["mlp"], cfg, h2)
+        x = x + y
+    elif kind == "mamba2":
+        x = x + mamba2_forward(p["mamba"], cfg, h)
+    elif kind == "rglru":
+        x = x + rglru_forward(p["rglru"], cfg, h)
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + mlp_forward(p["mlp"], cfg, h2)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def block_cache_meta(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind == "attn":
+        return attn_cache_meta(cfg, batch, max_len, block_window(cfg, kind))
+    if kind == "mamba2":
+        return mamba2_cache_meta(cfg, batch)
+    if kind == "rglru":
+        return rglru_cache_meta(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_decode(
+    p: dict, cfg: ModelConfig, kind: str, x: jax.Array, cache: dict, pos: jax.Array
+) -> Tuple[jax.Array, dict]:
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == "attn":
+        y, cache = attention_decode(
+            p["attn"], cfg, h, cache, pos, window=block_window(cfg, kind)
+        )
+        x = x + y
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        if cfg.n_experts > 0:
+            y2, _ = moe_forward(p["moe"], cfg, h2)
+        else:
+            y2 = mlp_forward(p["mlp"], cfg, h2)
+        x = x + y2
+    elif kind == "mamba2":
+        y, cache = mamba2_decode(p["mamba"], cfg, h, cache, pos)
+        x = x + y
+    elif kind == "rglru":
+        y, cache = rglru_decode(p["rglru"], cfg, h, cache, pos)
+        x = x + y
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + mlp_forward(p["mlp"], cfg, h2)
+    else:
+        raise ValueError(kind)
+    return x, cache

@@ -1,0 +1,151 @@
+"""Griffin recurrent block (RG-LRU) — recurrentgemma's temporal mixer.
+
+    r_t = sigmoid(BlockDiag_a(x_t))          # recurrence gate
+    i_t = sigmoid(BlockDiag_x(x_t))          # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)   # c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The linear recurrence runs as a log-depth ``associative_scan`` over the
+sequence (TPU-friendly), one elementwise lane per channel.  Gates are
+block-diagonal (n_heads blocks), as in the RecurrentGemma reference.
+
+Block structure: x -> (gate branch: linear+GeLU) * (x branch: linear ->
+causal conv(4) -> RG-LRU) -> output linear.  Decode carries (h, conv
+window): O(width) state — sub-quadratic serving for ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .params import ParamMeta
+from repro.parallel.hints import shard_hint
+
+__all__ = ["rglru_meta", "rglru_forward", "rglru_decode", "rglru_cache_meta"]
+
+_C = 8.0
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def rglru_meta(cfg: ModelConfig, pdtype) -> dict:
+    d = cfg.d_model
+    w = _width(cfg)
+    h = cfg.n_heads
+    bw = w // h
+    return {
+        "w_x": ParamMeta((d, w), pdtype, ("embed", "mlp")),
+        "w_gate": ParamMeta((d, w), pdtype, ("embed", "mlp")),
+        "conv_w": ParamMeta((cfg.ssm_conv, w), pdtype, ("conv", "mlp"), scale=0.5),
+        "conv_b": ParamMeta((w,), pdtype, ("mlp",), init="zeros"),
+        "gate_a": ParamMeta((h, bw, bw), pdtype, ("heads", None, None), fan_in_axis=1),
+        "bias_a": ParamMeta((w,), pdtype, ("mlp",), init="zeros"),
+        "gate_x": ParamMeta((h, bw, bw), pdtype, ("heads", None, None), fan_in_axis=1),
+        "bias_x": ParamMeta((w,), pdtype, ("mlp",), init="zeros"),
+        "lam": ParamMeta((w,), pdtype, ("mlp",), init="lru_a"),
+        "w_out": ParamMeta((w, d), pdtype, ("mlp", "embed")),
+    }
+
+
+def _block_diag(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (..., W) -> block-diagonal linear with (H, bw, bw) weights."""
+    H, bw, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (H, bw))
+    y = jnp.einsum("...hi,hij->...hj", xs, w.astype(x.dtype))
+    return y.reshape(x.shape) + b.astype(x.dtype)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _gates(p, x: jax.Array):
+    """Returns (a_t, gated input) in fp32.  x: (..., W)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_diag(xf, p["gate_a"].astype(jnp.float32), p["bias_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(_block_diag(xf, p["gate_x"].astype(jnp.float32), p["bias_x"].astype(jnp.float32)))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated
+
+
+def rglru_forward(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    dt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(dt)))
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(dt))
+    xb = _causal_conv(xb, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    xb = shard_hint(xb, ("act_batch", None, "act_mlp"))
+
+    a, gx = _gates(p, xb)  # (B, S, W) fp32
+
+    # h_t = a_t h_{t-1} + gx_t — associative scan WITHIN chunks, sequential
+    # carry ACROSS chunks.  A monolithic associative_scan's backward saves
+    # O(S*W*log S) per layer (measured 27 GiB/device on recurrentgemma
+    # train_4k); chunking bounds residuals to the (B, W) inter-chunk carry.
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    B_, S, Wd = a.shape
+    CH = min(512, S)
+    while S % CH:
+        CH -= 1
+    nch = S // CH
+    a_c = a.reshape(B_, nch, CH, Wd).transpose(1, 0, 2, 3)
+    g_c = gx.reshape(B_, nch, CH, Wd).transpose(1, 0, 2, 3)
+
+    def chunk_body(h_in, inp):
+        ac, gc = inp  # (B, CH, W)
+        # prefix products/sums with zero init, then add the carried state:
+        # h_t = P_t * h_in + y0_t, P_t = prod(a_1..t), y0 = scan with h=0.
+        P, y0 = lax.associative_scan(combine, (ac, gc), axis=1)
+        h_chunk = P * h_in[:, None, :] + y0
+        return h_chunk[:, -1, :], h_chunk
+
+    if nch > 1:
+        _, h_c = lax.scan(
+            jax.checkpoint(chunk_body), jnp.zeros((B_, Wd), jnp.float32), (a_c, g_c)
+        )
+        h = h_c.transpose(1, 0, 2, 3).reshape(B_, S, Wd)
+    else:
+        _, h = lax.associative_scan(combine, (a, gx), axis=1)
+    h = (h.astype(dt)) * gate
+    out = jnp.einsum("bsw,wd->bsd", h, p["w_out"].astype(dt))
+    return shard_hint(out, ("act_batch", "act_res_seq", None))
+
+
+def rglru_cache_meta(cfg: ModelConfig, batch: int):
+    w = _width(cfg)
+    return {
+        "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, w), cfg.activation_dtype),
+    }
+
+
+def rglru_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, cache: dict, pos: jax.Array
+) -> Tuple[jax.Array, dict]:
+    dt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(dt)))
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(dt))  # (B, 1, W)
+    window = jnp.concatenate([cache["conv"], xb], axis=1)
+    conv = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(dt)) + p["conv_b"].astype(dt)
+    a, gx = _gates(p, conv)  # (B, W)
+    h = cache["h"] * a + gx
+    out_h = h.astype(dt)[:, None, :] * gate
+    out = jnp.einsum("bsw,wd->bsd", out_h, p["w_out"].astype(dt))
+    return out, {"h": h, "conv": window[:, 1:, :]}

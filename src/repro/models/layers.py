@@ -1,0 +1,77 @@
+"""Shared layer primitives: norms, rotary embeddings, token embedding."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamMeta
+
+__all__ = [
+    "rmsnorm_meta",
+    "apply_norm",
+    "rotary_cos_sin",
+    "apply_rotary",
+    "embed_meta",
+    "embed_lookup",
+    "unembed",
+]
+
+
+def rmsnorm_meta(dim: int, kind: str, dtype) -> dict:
+    meta = {"scale": ParamMeta((dim,), dtype, ("embed",), init="ones")}
+    if kind == "layernorm":
+        meta["bias"] = ParamMeta((dim,), dtype, ("embed",), init="zeros")
+    return meta
+
+
+def apply_norm(params: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps)
+        y = y * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rotary_cos_sin(
+    positions: jax.Array, head_dim: int, theta: float, dtype=jnp.float32
+) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given (B?, S) integer positions; shape (..., S, hd/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, hd); cos/sin: (..., S, hd/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def embed_meta(vocab: int, dim: int, dtype) -> ParamMeta:
+    return ParamMeta((vocab, dim), dtype, ("vocab", "embed"), init="embed", scale=1.0)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def unembed(x: jax.Array, table: jax.Array, softcap: Optional[float]) -> jax.Array:
+    """Logits = x @ table^T (fp32 accumulation)."""
+    logits = jnp.einsum(
+        "...d,vd->...v", x, table, preferred_element_type=jnp.float32
+    )
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits

@@ -1,0 +1,235 @@
+"""Full decoder LM: embedding/frontend -> pattern-unit scan -> head.
+
+Layers are grouped into the smallest repeating **pattern unit** (1 layer for
+homogeneous archs; (rglru, rglru, attn) for recurrentgemma) and executed with
+``lax.scan`` over stacked unit parameters — one traced/compiled unit
+regardless of depth, which keeps the 512-device dry-run compile times sane.
+Remainder layers (26 = 3*8 + 2) run unrolled.
+
+Three entry points:
+  * ``forward``     — full-sequence logits (train / prefill)
+  * ``decode_step`` — one token against a cache pytree
+  * ``*_meta``      — ParamMeta / cache ShapeDtypeStruct builders (dry-run)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .blocks import (
+    ZERO_AUX,
+    block_cache_meta,
+    block_decode,
+    block_forward,
+    block_meta,
+)
+from .config import ModelConfig
+from .layers import embed_lookup, embed_meta, apply_norm, rmsnorm_meta, unembed
+from .params import ParamMeta, abstract_params, init_params, is_meta
+from repro.parallel.hints import shard_hint
+
+__all__ = [
+    "pattern_unit",
+    "model_meta",
+    "model_params",
+    "cache_meta",
+    "cache_init",
+    "forward",
+    "decode_step",
+]
+
+
+def pattern_unit(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """(unit pattern, n_units, remainder kinds)."""
+    kinds = cfg.layer_kinds
+    if cfg.family == "hybrid":
+        pat = cfg.griffin_pattern or ("rglru", "rglru", "attn")
+    else:
+        pat = (kinds[0],)
+    n_units = len(kinds) // len(pat)
+    rem = kinds[n_units * len(pat) :]
+    return tuple(pat), n_units, tuple(rem)
+
+
+def _stack_meta(tree, n: int):
+    def f(m: ParamMeta):
+        return ParamMeta(
+            (n,) + m.shape,
+            m.dtype,
+            ("layers",) + m.axes,
+            init=m.init,
+            scale=m.scale,
+            fan_in_axis=None if m.fan_in_axis is None else m.fan_in_axis + 1,
+        )
+
+    return jax.tree_util.tree_map(f, tree, is_leaf=is_meta)
+
+
+def model_meta(cfg: ModelConfig, model_axis: int = 16) -> dict:
+    pd = cfg.parameter_dtype
+    pat, n_units, rem = pattern_unit(cfg)
+    unit = {f"L{i}_{kind}": block_meta(cfg, kind, model_axis) for i, kind in enumerate(pat)}
+    meta = {
+        "embed": embed_meta(cfg.vocab, cfg.d_model, pd),
+        "final_norm": rmsnorm_meta(cfg.d_model, cfg.norm, pd),
+        "units": _stack_meta(unit, n_units),
+        "rem": {
+            f"R{i}_{kind}": block_meta(cfg, kind, model_axis)
+            for i, kind in enumerate(rem)
+        },
+    }
+    if not cfg.tie_embeddings:
+        meta["unembed"] = ParamMeta(
+            (cfg.vocab, cfg.d_model), pd, ("vocab", "embed"), scale=1.0
+        )
+    if cfg.frontend:
+        meta["frontend_proj"] = ParamMeta(
+            (cfg.frontend_dim, cfg.d_model), pd, ("frontend", "embed")
+        )
+    return meta
+
+
+def model_params(cfg: ModelConfig, key: jax.Array, model_axis: int = 16):
+    return init_params(model_meta(cfg, model_axis), key)
+
+
+def _embed_input(
+    params, cfg: ModelConfig, tokens: Optional[jax.Array], embeds: Optional[jax.Array]
+) -> jax.Array:
+    dt = cfg.activation_dtype
+    if embeds is not None:
+        x = jnp.einsum("bsf,fd->bsd", embeds.astype(dt), params["frontend_proj"].astype(dt))
+    else:
+        x = embed_lookup(params["embed"], tokens, dt)
+    return shard_hint(x, ("act_batch", "act_res_seq", None))
+
+
+def _unit_forward(cfg: ModelConfig, pat, unit_params, x):
+    aux = dict(ZERO_AUX)
+    for i, kind in enumerate(pat):
+        x, a = block_forward(unit_params[f"L{i}_{kind}"], cfg, kind, x)
+        aux = {k: aux[k] + a[k] for k in aux}
+    return x, aux
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,
+    embeds: Optional[jax.Array] = None,
+    return_hidden: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence forward.  Returns (logits fp32, aux losses); with
+    ``return_hidden`` returns the final-norm hidden states instead of logits
+    (training uses chunked cross-entropy so full-vocab logits are never
+    materialized)."""
+    pat, n_units, rem = pattern_unit(cfg)
+    x = _embed_input(params, cfg, tokens, embeds)
+
+    unit_fn = functools.partial(_unit_forward, cfg, pat)
+    if cfg.remat == "block":
+        unit_fn = jax.checkpoint(unit_fn)
+    elif cfg.remat == "dots":
+        unit_fn = jax.checkpoint(
+            unit_fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+
+    if n_units > 0:
+        def scan_body(carry, unit_params):
+            x, aux = carry
+            x, a = unit_fn(unit_params, x)
+            aux = {k: aux[k] + a[k] for k in aux}
+            return (x, aux), None
+
+        init_aux = {k: jnp.zeros((), jnp.float32) for k in ZERO_AUX}
+        (x, aux), _ = lax.scan(scan_body, (x, init_aux), params["units"])
+    else:
+        aux = {k: jnp.zeros((), jnp.float32) for k in ZERO_AUX}
+
+    for i, kind in enumerate(rem):
+        x, a = block_forward(params["rem"][f"R{i}_{kind}"], cfg, kind, x)
+        aux = {k: aux[k] + a[k] for k in aux}
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if return_hidden:
+        return x, aux
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(x, table, cfg.logit_softcap)
+    logits = shard_hint(logits, ("act_batch", None, "act_vocab"))
+    return logits, aux
+
+
+# ----------------------------------------------------------------------
+# Decode
+# ----------------------------------------------------------------------
+
+def cache_meta(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    pat, n_units, rem = pattern_unit(cfg)
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n_units,) + s.shape, s.dtype), tree
+        )
+
+    unit = {
+        f"L{i}_{kind}": block_cache_meta(cfg, kind, batch, max_len)
+        for i, kind in enumerate(pat)
+    }
+    return {
+        "units": stack(unit),
+        "rem": {
+            f"R{i}_{kind}": block_cache_meta(cfg, kind, batch, max_len)
+            for i, kind in enumerate(rem)
+        },
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_meta(cfg, batch, max_len)
+    )
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    cache: dict,
+    tokens: Optional[jax.Array] = None,
+    embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """One decode step.  tokens: (B, 1) int32 (or embeds (B, 1, F)).
+
+    Returns (logits (B, 1, V) fp32, updated cache)."""
+    pat, n_units, rem = pattern_unit(cfg)
+    pos = cache["pos"]
+    x = _embed_input(params, cfg, tokens, embeds)
+
+    if n_units > 0:
+        def scan_body(x, inp):
+            unit_params, unit_cache = inp
+            new_cache = {}
+            for i, kind in enumerate(pat):
+                key = f"L{i}_{kind}"
+                x, c = block_decode(unit_params[key], cfg, kind, x, unit_cache[key], pos)
+                new_cache[key] = c
+            return x, new_cache
+
+        x, new_unit_cache = lax.scan(scan_body, x, (params["units"], cache["units"]))
+    else:
+        new_unit_cache = cache["units"]
+
+    new_rem = {}
+    for i, kind in enumerate(rem):
+        key = f"R{i}_{kind}"
+        x, c = block_decode(params["rem"][key], cfg, kind, x, cache["rem"][key], pos)
+        new_rem[key] = c
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(x, table, cfg.logit_softcap)
+    return logits, {"units": new_unit_cache, "rem": new_rem, "pos": pos + 1}

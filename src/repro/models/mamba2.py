@@ -1,0 +1,296 @@
+"""Mamba2 block: SSD (state-space duality) with chunked matmul scan.
+
+The SSD algorithm (Dao & Gu, 2024) evaluates the selective-SSM recurrence
+
+    state_t = exp(dt_t A) state_{t-1} + dt_t * B_t (x) x_t
+    y_t     = C_t . state_t + D * x_t
+
+as (1) block-diagonal intra-chunk attention-like matmuls and (2) a short
+scan over chunk-level states — exactly the MXU-friendly decomposition TPUs
+want.  Heads H share B/C within ``ngroups`` groups (G=1 for mamba2-370m).
+
+Decode keeps (state, conv window) caches: O(H*P*N) per layer — why the
+``long_500k`` serving shape is trivially sub-quadratic for this family.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import apply_norm
+from .params import ParamMeta
+from repro.parallel.hints import shard_hint
+
+__all__ = [
+    "mamba2_meta",
+    "mamba2_forward",
+    "mamba2_decode",
+    "mamba2_cache_meta",
+    "ssd_chunked",
+    "ssd_reference",
+]
+
+
+def mamba2_meta(cfg: ModelConfig, pdtype) -> dict:
+    """Per-segment projections/convs (z | x | B | C | dt).
+
+    A fused in_proj forces GSPMD to reshard when the (z, xBC, dt) segments
+    are sliced out of a model-sharded output (segment cuts don't align with
+    shard boundaries) — measured as 47.5 GiB/step of collective-permutes on
+    train_4k.  Separate weights keep every segment locally sharded.
+    """
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    h = cfg.ssm_nheads
+    gn = g * n
+    return {
+        "w_z": ParamMeta((d, di), pdtype, ("embed", "mlp")),
+        "w_x": ParamMeta((d, di), pdtype, ("embed", "mlp")),
+        "w_B": ParamMeta((d, gn), pdtype, ("embed", "state")),
+        "w_C": ParamMeta((d, gn), pdtype, ("embed", "state")),
+        "w_dt": ParamMeta((d, h), pdtype, ("embed", "heads")),
+        "conv_x_w": ParamMeta((cfg.ssm_conv, di), pdtype, ("conv", "mlp"), scale=0.5),
+        "conv_x_b": ParamMeta((di,), pdtype, ("mlp",), init="zeros"),
+        "conv_B_w": ParamMeta((cfg.ssm_conv, gn), pdtype, ("conv", "state"), scale=0.5),
+        "conv_B_b": ParamMeta((gn,), pdtype, ("state",), init="zeros"),
+        "conv_C_w": ParamMeta((cfg.ssm_conv, gn), pdtype, ("conv", "state"), scale=0.5),
+        "conv_C_b": ParamMeta((gn,), pdtype, ("state",), init="zeros"),
+        "A_log": ParamMeta((h,), pdtype, ("heads",), init="ssm_alog"),
+        "dt_bias": ParamMeta((h,), pdtype, ("heads",), init="ssm_dtbias"),
+        "D": ParamMeta((h,), pdtype, ("heads",), init="ones"),
+        "norm_scale": ParamMeta((di,), pdtype, ("mlp",), init="ones"),
+        "out_proj": ParamMeta((di, d), pdtype, ("mlp", "embed")),
+    }
+
+
+def _silu_conv(xc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along S + SiLU.  xc: (B, S, Ch); w: (W, Ch)."""
+    W = w.shape[0]
+    pad = jnp.pad(xc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xc)
+    for i in range(W):  # W is tiny (4): unrolled shifted adds, no gather
+        out = out + pad[:, i : i + xc.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _segsum_decay(dtA_cs: jax.Array) -> jax.Array:
+    """L[i, j] = exp(cs_i - cs_j) for i >= j else 0.  dtA_cs: (..., Q).
+
+    The mask is applied to the EXPONENT (not the result): masked entries
+    have cs_i - cs_j > 0, exp overflows to inf, and the where-VJP would
+    produce 0 * inf = NaN gradients."""
+    diff = dtA_cs[..., :, None] - dtA_cs[..., None, :]
+    mask = jnp.tril(jnp.ones(diff.shape[-2:], bool))
+    diff = jnp.where(mask, diff, -jnp.inf)
+    return jnp.exp(jnp.minimum(diff, 0.0))
+
+
+def ssd_chunked(
+    X: jax.Array,       # (B, S, H, P)
+    dt: jax.Array,      # (B, S, H)   positive
+    A: jax.Array,       # (H,)        negative
+    Bm: jax.Array,      # (B, S, G, N)
+    Cm: jax.Array,      # (B, S, G, N)
+    chunk: int,
+) -> jax.Array:
+    B_, S, H, P = X.shape
+    G, N = Bm.shape[-2], Bm.shape[-1]
+    rep = H // G
+    Q = min(chunk, S)
+    while S % Q:  # largest divisor of S <= chunk (ragged sequences)
+        Q -= 1
+    nc = S // Q
+
+    f32 = jnp.float32
+    Xc = X.reshape(B_, nc, Q, H, P)
+    dtc = dt.reshape(B_, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(B_, nc, Q, G, N)
+    Cc = Cm.reshape(B_, nc, Q, G, N)
+
+    dtA = dtc * A.astype(f32)[None, None, None, :]       # (B, nc, Q, H)
+    cs = jnp.cumsum(dtA, axis=2)                         # inclusive
+    total = cs[:, :, -1, :]                              # (B, nc, H)
+
+    # ---- intra-chunk (block-diagonal "attention") -----------------------
+    # Matmul operands stay in the activation dtype (bf16 in production) with
+    # fp32 accumulation; decay/stat math stays fp32 — §Perf iteration.
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc,
+                    preferred_element_type=f32)          # (B,nc,G,Q,Q)
+    L = _segsum_decay(cs.transpose(0, 1, 3, 2))          # (B,nc,H,Q,Q)
+    L = L.reshape(B_, nc, G, rep, Q, Q)
+    M = CB[:, :, :, None] * L                            # (B,nc,G,rep,Q,Q)
+    M = M * dtc.reshape(B_, nc, Q, G, rep).transpose(0, 1, 3, 4, 2)[:, :, :, :, None, :]
+    Xg = Xc.reshape(B_, nc, Q, G, rep, P)
+    Y_intra = jnp.einsum("bcgrqk,bckgrp->bcqgrp", M.astype(X.dtype), Xg,
+                         preferred_element_type=f32)
+
+    # ---- chunk states ----------------------------------------------------
+    # S_c = sum_j exp(total - cs_j) dt_j  B_j (x) x_j     -> (B, nc, H, N, P)
+    decay_out = jnp.exp(total[:, :, None, :] - cs)       # (B, nc, Q, H)
+    w_j = (decay_out * dtc).reshape(B_, nc, Q, G, rep)
+    Sc = jnp.einsum("bcqgn,bcqgr,bcqgrp->bcgrnp", Bc, w_j.astype(X.dtype),
+                    Xg, preferred_element_type=f32)
+
+    # ---- inter-chunk scan ------------------------------------------------
+    decay_chunk = jnp.exp(total).reshape(B_, nc, G, rep)  # (B, nc, G, rep)
+
+    def scan_body(state, inp):
+        dc, sc = inp  # (B,G,rep), (B,G,rep,N,P)
+        new = state * dc[..., None, None] + sc
+        return new, state  # emit state BEFORE this chunk
+
+    init = jnp.zeros((B_, G, rep, N, P), f32)
+    _, state_prev = lax.scan(
+        scan_body,
+        init,
+        (decay_chunk.transpose(1, 0, 2, 3), Sc.transpose(1, 0, 2, 3, 4, 5)),
+    )
+    state_prev = state_prev.transpose(1, 0, 2, 3, 4, 5)  # (B, nc, G, rep, N, P)
+
+    # Y_inter[i] = C_i . (exp(cs_i) * state_prev)
+    decay_in = jnp.exp(cs).reshape(B_, nc, Q, G, rep)
+    Y_inter = jnp.einsum(
+        "bcqgn,bcqgr,bcgrnp->bcqgrp",
+        Cc, decay_in.astype(X.dtype), state_prev.astype(X.dtype),
+        preferred_element_type=f32,
+    )
+
+    Y = (Y_intra + Y_inter).reshape(B_, nc, Q, H, P).reshape(B_, S, H, P)
+    return Y.astype(X.dtype)
+
+
+def ssd_reference(X, dt, A, Bm, Cm):
+    """Sequential recurrence oracle (lax.scan over time)."""
+    B_, S, H, P = X.shape
+    G, N = Bm.shape[-2], Bm.shape[-1]
+    rep = H // G
+    f32 = jnp.float32
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,G,N), (B,G,N)
+        a_t = jnp.exp(dt_t.astype(f32) * A.astype(f32))  # (B,H)
+        bg = jnp.repeat(b_t, rep, axis=1)  # (B,H,N)
+        cg = jnp.repeat(c_t, rep, axis=1)
+        outer = dt_t.astype(f32)[..., None, None] * jnp.einsum(
+            "bhn,bhp->bhnp", bg.astype(f32), x_t.astype(f32)
+        )
+        state = state * a_t[..., None, None] + outer
+        y = jnp.einsum("bhn,bhnp->bhp", cg.astype(f32), state)
+        return state, y
+
+    init = jnp.zeros((B_, H, N, P), f32)
+    xs = (
+        X.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        Bm.transpose(1, 0, 2, 3),
+        Cm.transpose(1, 0, 2, 3),
+    )
+    _, ys = lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(X.dtype)
+
+
+def _pre_ssm(p, cfg: ModelConfig, x: jax.Array):
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(dt_))
+    Bm = jnp.einsum("bsd,de->bse", x, p["w_B"].astype(dt_))
+    Cm = jnp.einsum("bsd,de->bse", x, p["w_C"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,de->bse", x, p["w_dt"].astype(dt_))
+    xs = shard_hint(xs, ("act_batch", None, "act_mlp"))
+    xs = _silu_conv(xs, p["conv_x_w"].astype(dt_), p["conv_x_b"].astype(dt_))
+    Bm = _silu_conv(Bm, p["conv_B_w"].astype(dt_), p["conv_B_b"].astype(dt_))
+    Cm = _silu_conv(Cm, p["conv_C_w"].astype(dt_), p["conv_C_b"].astype(dt_))
+    return z, xs, Bm, Cm, dt_raw
+
+
+def _post_ssm(p, cfg: ModelConfig, y: jax.Array, z: jax.Array):
+    gated = y * jax.nn.silu(z)
+    normed = apply_norm({"scale": p["norm_scale"]}, gated, "rmsnorm")
+    return jnp.einsum("bse,ed->bsd", normed, p["out_proj"].astype(y.dtype))
+
+
+def mamba2_forward(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, D = x.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    P = cfg.ssm_headdim
+    z, xseg, Bseg, Cseg, dt_raw = _pre_ssm(p, cfg, x)
+    xs = xseg.reshape(B, S, h, P)
+    Bm = Bseg.reshape(B, S, g, n)
+    Cm = Cseg.reshape(B, S, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xs
+    out = _post_ssm(p, cfg, y.reshape(B, S, di), z)
+    return shard_hint(out, ("act_batch", "act_res_seq", None))
+
+
+# ----------------------------------------------------------------------
+# Decode
+# ----------------------------------------------------------------------
+
+def mamba2_cache_meta(cfg: ModelConfig, batch: int):
+    di, g, n = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    h, P = cfg.ssm_nheads, cfg.ssm_headdim
+    gn = g * n
+    dt = cfg.activation_dtype
+    return {
+        "state": jax.ShapeDtypeStruct((batch, h, n, P), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, di), dt),
+        "conv_bc": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, 2 * gn), dt),
+    }
+
+
+def mamba2_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, cache: dict, pos: jax.Array
+) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, D) -> (out (B, 1, D), cache)."""
+    B = x.shape[0]
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    P = cfg.ssm_headdim
+    gn = g * n
+    dt_ = x.dtype
+
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(dt_))
+    x_new = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(dt_))
+    B_new = jnp.einsum("bsd,de->bse", x, p["w_B"].astype(dt_))
+    C_new = jnp.einsum("bsd,de->bse", x, p["w_C"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,de->bse", x, p["w_dt"].astype(dt_))
+
+    win_x = jnp.concatenate([cache["conv"], x_new], axis=1)  # (B, W, di)
+    win_bc = jnp.concatenate(
+        [cache["conv_bc"], jnp.concatenate([B_new, C_new], axis=-1)], axis=1
+    )
+    xs_c = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", win_x, p["conv_x_w"].astype(dt_))
+        + p["conv_x_b"].astype(dt_)
+    )
+    wbc = jnp.concatenate(
+        [p["conv_B_w"].astype(dt_), p["conv_C_w"].astype(dt_)], axis=1
+    )
+    bbc = jnp.concatenate([p["conv_B_b"].astype(dt_), p["conv_C_b"].astype(dt_)])
+    bc_c = jax.nn.silu(jnp.einsum("bwc,wc->bc", win_bc, wbc) + bbc)
+    new_conv = win_x[:, 1:, :]
+    new_conv_bc = win_bc[:, 1:, :]
+
+    xs = xs_c.reshape(B, h, P)
+    Bm = jnp.repeat(bc_c[..., :gn].reshape(B, g, n), h // g, axis=1)
+    Cm = jnp.repeat(bc_c[..., gn:].reshape(B, g, n), h // g, axis=1)
+    dt = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B, h)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a_t = jnp.exp(dt * A[None, :])  # (B, h)
+    outer = dt[..., None, None] * jnp.einsum(
+        "bhn,bhp->bhnp", Bm.astype(jnp.float32), xs.astype(jnp.float32)
+    )
+    state = cache["state"] * a_t[..., None, None] + outer
+    y = jnp.einsum("bhn,bhnp->bhp", Cm.astype(jnp.float32), state).astype(dt_)
+    y = y + p["D"].astype(dt_)[None, :, None] * xs
+    out = _post_ssm(p, cfg, y.reshape(B, 1, di), z)
+    return out, {"state": state, "conv": new_conv, "conv_bc": new_conv_bc}

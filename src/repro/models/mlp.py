@@ -1,0 +1,37 @@
+"""Dense MLPs: SwiGLU / GeGLU / plain GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamMeta
+from repro.parallel.hints import shard_hint
+
+
+def mlp_meta(cfg: ModelConfig, pdtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamMeta((d, f), pdtype, ("embed", "mlp")),
+            "w_up": ParamMeta((d, f), pdtype, ("embed", "mlp")),
+            "w_down": ParamMeta((f, d), pdtype, ("mlp", "embed")),
+        }
+    return {
+        "w_up": ParamMeta((d, f), pdtype, ("embed", "mlp")),
+        "w_down": ParamMeta((f, d), pdtype, ("mlp", "embed")),
+    }
+
+
+def mlp_forward(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        act = jax.nn.silu(g) if cfg.mlp_act == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt)))
+    h = shard_hint(h, ("act_batch", None, "act_mlp"))
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+    return shard_hint(out, ("act_batch", "act_res_seq", None))

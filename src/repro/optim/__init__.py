@@ -1,0 +1,25 @@
+"""repro.optim — AdamW baseline + EVD-powered Shampoo + compression."""
+from .base import Optimizer, apply_updates, global_norm, clip_by_global_norm
+from .adamw import adamw, warmup_cosine
+from .shampoo import shampoo, ShampooOptions
+from .compression import (
+    quantize_int8,
+    dequantize_int8,
+    compressed_psum,
+    ef_compress_transform,
+)
+
+__all__ = [
+    "Optimizer",
+    "apply_updates",
+    "global_norm",
+    "clip_by_global_norm",
+    "adamw",
+    "warmup_cosine",
+    "shampoo",
+    "ShampooOptions",
+    "quantize_int8",
+    "dequantize_int8",
+    "compressed_psum",
+    "ef_compress_transform",
+]

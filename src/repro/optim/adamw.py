@@ -1,0 +1,72 @@
+"""AdamW with linear-warmup cosine decay — the baseline optimizer."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer, clip_by_global_norm
+
+__all__ = ["adamw", "AdamWState", "warmup_cosine"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: object
+    nu: object
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+
+    return schedule
+
+
+def adamw(
+    lr=3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    grad_clip: Optional[float] = 1.0,
+) -> Optimizer:
+    schedule = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads, state, params):
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        step = state.step + 1
+        lr_t = schedule(step)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads
+        )
+
+        def upd(m, v, p):
+            mhat = m / c1
+            vhat = v / c2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)

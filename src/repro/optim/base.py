@@ -1,0 +1,29 @@
+"""Minimal optax-style optimizer interface (no external deps)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "apply_updates", "global_norm", "clip_by_global_norm"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]            # params -> state
+    update: Callable[..., tuple]          # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree_util.tree_map(lambda x: x * scale, tree), g

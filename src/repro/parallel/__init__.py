@@ -1,0 +1,4 @@
+"""repro.parallel — meshes, sharding rules, activation hints, compression."""
+from .hints import shard_hint, hint_resolver, make_mesh_resolver
+
+__all__ = ["shard_hint", "hint_resolver", "make_mesh_resolver"]

@@ -1,0 +1,72 @@
+"""Activation-sharding hints decoupled from model code.
+
+Model layers call ``shard_hint(x, logical_axes)`` with *logical* names
+("data", "model", None per dim).  The launcher installs a resolver that maps
+logical names to mesh axes and applies ``with_sharding_constraint``; with no
+resolver installed (unit tests, single device) the hint is the identity.
+
+This keeps the model definitions mesh-agnostic while still giving GSPMD the
+Megatron-style activation constraints it needs at 512 chips.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["shard_hint", "hint_resolver", "make_mesh_resolver"]
+
+_state = threading.local()
+
+
+def _resolver() -> Optional[Callable]:
+    return getattr(_state, "resolver", None)
+
+
+@contextlib.contextmanager
+def hint_resolver(fn: Callable):
+    """Install a resolver: fn(x, logical_axes) -> x (usually a sharding
+    constraint).  Thread-local, re-entrant."""
+    prev = _resolver()
+    _state.resolver = fn
+    try:
+        yield
+    finally:
+        _state.resolver = prev
+
+
+def shard_hint(x: jax.Array, logical_axes: Sequence[Optional[str]]):
+    fn = _resolver()
+    if fn is None:
+        return x
+    return fn(x, tuple(logical_axes))
+
+
+def make_mesh_resolver(mesh, rules: dict):
+    """Standard resolver: logical name -> mesh axis (or tuple) via ``rules``.
+
+    Unknown names replicate.  Axes whose mesh mapping repeats an
+    already-used mesh axis are dropped (PartitionSpec uniqueness).
+    """
+
+    def fn(x, logical_axes):
+        if len(logical_axes) != x.ndim:
+            return x
+        seen = set()
+        entries = []
+        for name in logical_axes:
+            r = rules.get(name) if name else None
+            names = r if isinstance(r, tuple) else ((r,) if r else ())
+            keep = tuple(a for a in names if a not in seen)
+            seen.update(keep)
+            entries.append(
+                keep[0] if len(keep) == 1 else (keep if keep else None)
+            )
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, P(*entries))
+        )
+
+    return fn

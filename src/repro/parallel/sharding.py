@@ -1,0 +1,175 @@
+"""Sharding rules: logical axis names -> mesh axes.
+
+Two rule tables per mesh:
+  * ``param_rules``      — for ParamMeta logical axes (see models/params.py)
+  * ``activation_rules`` — for shard_hint logical names
+
+Strategy (Megatron + optional FSDP/SP, DESIGN.md §5):
+  - "model" axis: vocab, q/kv heads, mlp hidden, experts  (TP / EP)
+  - "data"+"pod" axes: batch (DP); optionally the embed axis of big params
+    (FSDP) so 47B-param archs fit 16 GB chips
+  - sequence parallelism: residual-stream seq dim on "model" between blocks
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .hints import make_mesh_resolver
+
+__all__ = [
+    "ShardingPolicy", "make_policy", "named_sharding_tree",
+    "resolve_attn_mode", "resolve_moe_mode",
+]
+
+
+def resolve_moe_mode(cfg, model_size: int) -> str:
+    """ep | capacity | tp — which MoE parallelism fits this arch.
+
+    capacity: replicate expert weights, shard the capacity dim on "model" —
+    avoids the all-reduce of the (B, E, C, D)-sized dispatched tensor that
+    TP-within-expert incurs (the contraction over the sharded FFN dim).
+    Chosen when the whole expert stack is small enough to replicate
+    (granite: 40 x 3 x 1536 x 512 x 4B = 0.5 GB).  Large-expert archs
+    (mixtral) keep TP; true EP when E divides the axis.
+    """
+    e = getattr(cfg, "n_experts", 0) or 0
+    if not e:
+        return "tp"
+    if e % model_size == 0:
+        return "ep"
+    per_layer_bytes = 3 * e * cfg.d_model * cfg.d_ff * 4
+    if per_layer_bytes <= 2 * 2**30:
+        return "capacity"
+    return "tp"
+
+
+def resolve_attn_mode(cfg, model_size: int) -> str:
+    """heads | q_heads | cp — which attention TP strategy fits this arch."""
+    nh = getattr(cfg, "n_heads", 0) or 0
+    nkv = getattr(cfg, "n_kv_heads", 0) or 0
+    if nh and nh % model_size == 0:
+        return "heads" if (nkv and nkv % model_size == 0) else "q_heads"
+    return "cp"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    param_rules: Dict[Optional[str], object]
+    activation_rules: Dict[str, object]
+
+    def resolver(self):
+        return make_mesh_resolver(self.mesh, self.activation_rules)
+
+    def param_specs(self, meta_tree):
+        from repro.models.params import partition_specs
+
+        return partition_specs(meta_tree, self.param_rules)
+
+    def param_shardings(self, meta_tree):
+        specs = self.param_specs(meta_tree)
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), specs
+        )
+
+
+def make_policy(
+    mesh: Mesh,
+    cfg=None,
+    *,
+    fsdp: bool = True,
+    sequence_parallel: bool = False,
+    pure_dp: bool = False,
+) -> ShardingPolicy:
+    """Build the standard 2-D (+pod) policy for this mesh.
+
+    ``fsdp``: additionally shard the embed axis of weight matrices over the
+    "data" axis (ZeRO-3 style; XLA all-gathers per layer inside the scan).
+    ``sequence_parallel``: shard the residual-stream sequence dim on "model"
+    between blocks (turns the post-block all-reduce into reduce-scatter +
+    all-gather and shards norm compute).
+
+    Head counts that don't divide the model axis are handled by GSPMD's
+    implicit padding (24 heads on 16 devices pad to 32 — recorded waste);
+    tiny KV head counts (GQA/MQA with kv < model axis) replicate K/V
+    instead, the standard GQA-TP trade.
+    """
+    axis_names = mesh.axis_names
+    has_pod = "pod" in axis_names
+    dp: Tuple[str, ...] = ("pod", "data") if has_pod else ("data",)
+    model_size = mesh.shape["model"] if "model" in axis_names else 1
+
+    if pure_dp:
+        # Small models (<~1B): TP wastes the model axis on per-layer
+        # all-reduces; run batch over EVERY axis, FSDP params over both.
+        all_ax = tuple(axis_names)
+        param_rules = {k: (all_ax if k == "embed" and fsdp else None) for k in (
+            "vocab", "embed", "mlp", "q_heads", "kv_heads", "head_dim",
+            "experts", "expert_mlp", "layers", "state", "conv", "heads",
+            "frontend", None,
+        )}
+        activation_rules = {
+            "act_batch": all_ax,
+            "act_heads": None, "act_kv_heads": None, "act_mlp": None,
+            "act_experts": None, "act_capacity": None, "act_expert_mlp": None,
+            "act_vocab": None, "act_q_chunks": None, "act_res_seq": None,
+        }
+        return ShardingPolicy(mesh, param_rules, activation_rules)
+
+    # Attention TP mode (jit input shardings need exact divisibility):
+    #   heads     — q and kv head counts both divide the model axis
+    #   q_only    — q divides; K/V replicated (narrow GQA/MQA, standard trade)
+    #   none      — attention weights replicated on model (FSDP still shards
+    #               memory over data); a recorded §Perf inefficiency for
+    #               24/40/10-head archs on a 16-wide model axis
+    mode = resolve_attn_mode(cfg, model_size) if cfg is not None else "heads"
+    q_rule: object = "model" if mode in ("heads", "q_heads") else None
+    kv_rule: object = "model" if mode == "heads" else None
+    cp_rule: object = "model" if mode == "cp" else None
+
+    # Experts: ep / tp / capacity per resolve_moe_mode (no parameter padding).
+    moe_mode = resolve_moe_mode(cfg, model_size) if cfg is not None else "tp"
+    exp_rule: object = "model" if moe_mode == "ep" else None
+    cap_rule: object = "model" if moe_mode == "capacity" else None
+
+    fs = dp if fsdp else None
+    param_rules = {
+        "vocab": "model",
+        "embed": fs,            # FSDP shard of the non-TP axis
+        "mlp": "model",
+        "q_heads": q_rule,
+        "kv_heads": kv_rule,
+        "head_dim": None,
+        "experts": exp_rule,
+        "expert_mlp": None if moe_mode == "capacity" else "model",
+        "layers": None,
+        "state": None,
+        "conv": None,
+        "heads": None,          # small per-head vectors (mamba A/dt/D)
+        "frontend": None,
+        None: None,
+    }
+
+    activation_rules = {
+        "act_batch": dp,
+        "act_heads": q_rule,
+        "act_kv_heads": kv_rule,
+        "act_mlp": "model",
+        "act_experts": exp_rule,
+        "act_capacity": cap_rule,
+        "act_expert_mlp": None if moe_mode == "capacity" else "model",
+        "act_vocab": "model",
+        "act_q_chunks": cp_rule,
+        "act_res_seq": "model" if sequence_parallel else None,
+    }
+    return ShardingPolicy(mesh, param_rules, activation_rules)
+
+
+def named_sharding_tree(policy: ShardingPolicy, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(policy.mesh, s), spec_tree
+    )

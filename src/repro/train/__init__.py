@@ -1,0 +1,19 @@
+"""repro.train — step builders + fault-tolerant training loop."""
+from .step import (
+    cross_entropy,
+    make_loss_fn,
+    make_train_step,
+    make_prefill,
+    make_serve_step,
+)
+from .loop import TrainLoop, TrainLoopConfig
+
+__all__ = [
+    "cross_entropy",
+    "make_loss_fn",
+    "make_train_step",
+    "make_prefill",
+    "make_serve_step",
+    "TrainLoop",
+    "TrainLoopConfig",
+]

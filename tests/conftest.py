@@ -1,0 +1,23 @@
+import os
+
+# Tests run single-device (the dry-run sets its own device count in a
+# separate process; see test_sharding.py which spawns subprocesses).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_symmetric(rng, n, dtype=np.float32, scale=1.0):
+    a = rng.normal(size=(n, n)).astype(dtype) * scale
+    return a + a.T
+
+
+def random_psd(rng, n, dtype=np.float32, ridge=0.1):
+    g = rng.normal(size=(n, n)).astype(dtype)
+    return g @ g.T + ridge * np.eye(n, dtype=dtype)

@@ -1,0 +1,88 @@
+"""Bulge chasing tests: sequential oracle vs wavefront schedule vs Pallas."""
+import numpy as np
+import pytest
+import scipy.linalg as sla
+import jax.numpy as jnp
+
+from repro.core import (
+    band_reduce,
+    chase_sequential,
+    chase_wavefront,
+    apply_q2,
+    extract_tridiag,
+)
+from conftest import random_symmetric
+
+
+def make_band(rng, n, b):
+    A = jnp.asarray(random_symmetric(rng, n))
+    return band_reduce(A, b, min(4 * b, n - b))
+
+
+def tri_mask(n):
+    return np.abs(np.subtract.outer(np.arange(n), np.arange(n))) > 1
+
+
+@pytest.mark.parametrize("n,b", [(24, 2), (32, 4), (48, 4), (40, 8), (33, 4), (16, 8)])
+def test_wavefront_matches_sequential(rng, n, b):
+    """The two executors run the same ops in different interleavings (and
+    different XLA fusions), so raw entries agree only to accumulated
+    rounding; the invariant — the spectrum — must match tightly, and both
+    must be exactly tridiagonal."""
+    # n=33/16: ragged tails; b=8 on 16: few ops per sweep.
+    A = random_symmetric(rng, (n // b) * b if n % b else n)
+    n = A.shape[0]
+    B = band_reduce(jnp.asarray(A), b, b)
+    T1 = chase_sequential(B, b)
+    T2 = chase_wavefront(B, b)
+    scale = float(jnp.abs(B).max())
+    np.testing.assert_allclose(T1, T2, atol=5e-3 * scale)  # loose entrywise
+    assert np.abs(np.asarray(T1) * tri_mask(n)).max() == 0.0
+    assert np.abs(np.asarray(T2) * tri_mask(n)).max() == 0.0
+    ew = lambda T: np.sort(
+        sla.eigvalsh_tridiagonal(
+            np.asarray(jnp.diagonal(T), np.float64),
+            np.asarray(jnp.diagonal(T, -1), np.float64),
+        )
+    )
+    np.testing.assert_allclose(ew(T1), ew(T2), atol=2e-4 * scale)
+
+
+@pytest.mark.parametrize("n,b", [(32, 4), (48, 8)])
+def test_spectrum_preserved(rng, n, b):
+    B = make_band(rng, n, b)
+    T = chase_wavefront(B, b)
+    d, e = extract_tridiag(T)
+    ew1 = np.sort(sla.eigvalsh(np.asarray(B, np.float64)))
+    ew2 = np.sort(sla.eigvalsh_tridiagonal(np.asarray(d, np.float64), np.asarray(e, np.float64)))
+    np.testing.assert_allclose(ew1, ew2, atol=2e-4 * np.abs(ew1).max())
+
+
+@pytest.mark.parametrize("executor", [chase_sequential, chase_wavefront])
+def test_q2_reconstruction(rng, executor):
+    n, b = 32, 4
+    B = make_band(rng, n, b)
+    T, log = executor(B, b, return_log=True)
+    Q2 = np.asarray(apply_q2(log, jnp.eye(n)))
+    scale = float(jnp.abs(B).max())
+    np.testing.assert_allclose(Q2.T @ Q2, np.eye(n), atol=5e-5)
+    np.testing.assert_allclose(Q2 @ np.asarray(T) @ Q2.T, np.asarray(B), atol=2e-4 * scale)
+
+
+def test_q2_transpose_roundtrip(rng):
+    n, b = 24, 4
+    B = make_band(rng, n, b)
+    _, log = chase_wavefront(B, b, return_log=True)
+    X = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+    Y = apply_q2(log, X, transpose=False)
+    X2 = apply_q2(log, Y, transpose=True)
+    np.testing.assert_allclose(X2, X, atol=5e-5)
+
+
+def test_already_tridiagonal_noop(rng):
+    n, b = 16, 4
+    d = rng.normal(size=n).astype(np.float32)
+    e = rng.normal(size=n - 1).astype(np.float32)
+    B = jnp.asarray(np.diag(d) + np.diag(e, 1) + np.diag(e, -1))
+    T = chase_wavefront(B, b)
+    np.testing.assert_allclose(T, B, atol=1e-5)

@@ -1,0 +1,88 @@
+"""Householder / panel-QR unit + property tests."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    house,
+    larft,
+    panel_qr_geqrf,
+    panel_qr_householder,
+    apply_house_both,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 10_000))
+def test_house_annihilates(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    v, tau, beta = house(x)
+    Hx = x - tau * v * (v @ x)
+    scale = max(float(jnp.linalg.norm(x)), 1e-6)
+    assert abs(float(Hx[0]) - float(beta)) < 1e-5 * scale + 1e-6
+    assert float(jnp.max(jnp.abs(Hx[1:]))) < 1e-5 * scale + 1e-6
+    assert float(v[0]) == 1.0
+
+
+def test_house_degenerate():
+    x = jnp.asarray([3.0, 0.0, 0.0], jnp.float32)
+    v, tau, beta = house(x)
+    assert float(tau) == 0.0 and float(beta) == 3.0
+    x = jnp.zeros(4, jnp.float32)
+    v, tau, beta = house(x)
+    assert float(tau) == 0.0 and float(beta) == 0.0
+
+
+def test_house_reflection_involution(rng):
+    x = jnp.asarray(rng.normal(size=9).astype(np.float32))
+    v, tau, _ = house(x)
+    H = jnp.eye(9) - tau * jnp.outer(v, v)
+    np.testing.assert_allclose(H @ H, np.eye(9), atol=1e-5)
+
+
+@pytest.mark.parametrize("m,b", [(8, 4), (24, 4), (32, 8), (16, 16), (40, 8)])
+@pytest.mark.parametrize("method", [panel_qr_geqrf, panel_qr_householder])
+def test_panel_qr(rng, m, b, method):
+    P = jnp.asarray(rng.normal(size=(m, b)).astype(np.float32))
+    V, T, taus, R = method(P)
+    Q = jnp.eye(m) - V @ T @ V.T
+    # Q orthogonal, Q^T P = [R; 0], R upper triangular
+    np.testing.assert_allclose(Q.T @ Q, np.eye(m), atol=3e-5)
+    recon = Q.T @ P
+    np.testing.assert_allclose(recon[:b], R, atol=3e-5)
+    np.testing.assert_allclose(recon[b:], 0, atol=3e-5)
+    assert np.allclose(np.tril(np.asarray(R), -1), 0, atol=3e-6)
+    # unit lower-trapezoidal V
+    assert np.allclose(np.asarray(V)[np.arange(b), np.arange(b)], 1.0)
+
+
+def test_panel_qr_methods_agree(rng):
+    """geqrf and the scan QR may differ by column-sign conventions; the
+    factorizations must agree up to a diagonal sign matrix."""
+    P = jnp.asarray(rng.normal(size=(20, 4)).astype(np.float32))
+    V1, T1, tau1, R1 = panel_qr_geqrf(P)
+    V2, T2, tau2, R2 = panel_qr_householder(P)
+    np.testing.assert_allclose(np.abs(np.asarray(R1)), np.abs(np.asarray(R2)), atol=5e-5)
+    Q1 = np.asarray(jnp.eye(20) - V1 @ T1 @ V1.T)
+    Q2 = np.asarray(jnp.eye(20) - V2 @ T2 @ V2.T)
+    d = np.sign(np.diag(np.asarray(R1)) * np.diag(np.asarray(R2)))
+    np.testing.assert_allclose(Q1[:, :4] * d[None, :], Q2[:, :4], atol=5e-5)
+
+
+def test_apply_house_both_symmetry(rng):
+    A0 = rng.normal(size=(12, 12)).astype(np.float32)
+    A = jnp.asarray(A0 + A0.T)
+    x = jnp.asarray(rng.normal(size=12).astype(np.float32))
+    v, tau, _ = house(x)
+    out = apply_house_both(A, v, tau)
+    np.testing.assert_allclose(out, np.asarray(out).T, atol=1e-5)
+    # similarity: eigenvalues preserved
+    import scipy.linalg as sla
+    np.testing.assert_allclose(
+        np.sort(sla.eigvalsh(np.asarray(out))),
+        np.sort(sla.eigvalsh(np.asarray(A))),
+        atol=1e-4,
+    )

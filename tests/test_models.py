@@ -1,0 +1,178 @@
+"""Per-architecture smoke tests + layer-level correctness oracles."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, get_smoke_config, canonical
+from repro.models import (
+    model_params,
+    model_meta,
+    forward,
+    decode_step,
+    cache_init,
+    param_count,
+    abstract_params,
+)
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 64
+
+
+def _inputs(cfg):
+    if cfg.frontend:
+        return {"embeds": jax.random.normal(KEY, (B, S, cfg.frontend_dim), jnp.float32)}
+    return {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one train step, shapes + finiteness."""
+    cfg = get_smoke_config(arch)
+    params = model_params(cfg, KEY, model_axis=2)
+    logits, aux = forward(params, cfg, **_inputs(cfg))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    # one train step
+    from repro.optim import adamw, apply_updates
+    from repro.train import make_train_step
+
+    opt = adamw(1e-3)
+    state = opt.init(params)
+    step = make_train_step(cfg, opt)
+    batch = {**_inputs(cfg), "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    if cfg.frontend:
+        batch["tokens"] = batch["labels"]
+    p2, s2, metrics = jax.jit(step)(params, state, batch, jnp.zeros((), jnp.int32))
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed somewhere (frontend archs legitimately leave
+    # the token-embedding table untouched: input is precomputed embeds)
+    delta = sum(
+        float(jnp.abs(a - b).sum())
+        for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_decode(arch):
+    cfg = get_smoke_config(arch)
+    params = model_params(cfg, KEY, model_axis=2)
+    cache = cache_init(cfg, B, 32)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for _ in range(3):
+        logits, cache = decode_step(params, cfg, cache, tokens=tok)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache["pos"]) == 3
+
+
+@pytest.mark.parametrize(
+    "arch", ["llama32_3b", "mamba2_370m", "recurrentgemma_2b", "mixtral_8x7b", "musicgen_large"]
+)
+def test_prefill_decode_consistency(arch):
+    """Teacher-forced decode must reproduce full-sequence logits."""
+    cfg = get_smoke_config(arch)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_impl="dense")
+    params = model_params(cfg, KEY, model_axis=2)
+    n = 24
+    toks = jax.random.randint(KEY, (1, n), 0, cfg.vocab)
+    if cfg.frontend:
+        logits_full, _ = forward(params, cfg, tokens=toks)
+    else:
+        logits_full, _ = forward(params, cfg, tokens=toks)
+    cache = cache_init(cfg, 1, 32)
+    outs = []
+    for t in range(n):
+        lg, cache = decode_step(params, cfg, cache, tokens=toks[:, t : t + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    scale = float(jnp.abs(logits_full).max())
+    # SSM archs accumulate fp32 recurrence differently chunked vs stepwise.
+    tol = 1.5e-2 if cfg.family == "ssm" else 3e-3
+    np.testing.assert_allclose(logits_full, dec, atol=tol * scale)
+
+
+def test_ssd_chunked_vs_reference(rng):
+    from repro.models.mamba2 import ssd_chunked, ssd_reference
+
+    B_, S_, H, P, G, N = 2, 48, 4, 8, 2, 8
+    X = jnp.asarray(rng.normal(size=(B_, S_, H, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(B_, S_, H)).astype(np.float32))
+    A = jnp.asarray(-rng.uniform(0.5, 4.0, size=(H,)).astype(np.float32))
+    Bm = jnp.asarray(rng.normal(size=(B_, S_, G, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(B_, S_, G, N)).astype(np.float32))
+    y1 = ssd_chunked(X, dt, A, Bm, Cm, 16)
+    y2 = ssd_reference(X, dt, A, Bm, Cm)
+    np.testing.assert_allclose(y1, y2, atol=5e-5 * float(jnp.abs(y2).max()))
+
+
+def test_moe_dropping_matches_dense_at_high_capacity(rng):
+    from repro.models.moe import moe_meta, moe_forward
+    from repro.models.params import init_params
+
+    cfg = get_smoke_config("mixtral_8x7b")
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    meta = moe_meta(cfg, jnp.float32, model_axis=2)
+    p = init_params(meta, KEY)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.float32)
+    yd, auxd = moe_forward(p, dataclasses.replace(cfg, moe_impl="dense"), x)
+    yr, auxr = moe_forward(p, dataclasses.replace(cfg, moe_impl="dropping"), x)
+    np.testing.assert_allclose(yd, yr, atol=1e-5 * float(jnp.abs(yd).max() + 1))
+    assert np.isclose(float(auxd["moe_lb"]), float(auxr["moe_lb"]))
+
+
+def test_moe_dropping_drops_at_low_capacity(rng):
+    from repro.models.moe import moe_meta, moe_forward
+    from repro.models.params import init_params
+
+    cfg = get_smoke_config("mixtral_8x7b")
+    cfg = dataclasses.replace(cfg, capacity_factor=0.25, moe_impl="dropping")
+    meta = moe_meta(cfg, jnp.float32, model_axis=2)
+    p = init_params(meta, KEY)
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model), jnp.float32)
+    y, _ = moe_forward(p, cfg, x)
+    assert bool(jnp.all(jnp.isfinite(y)))  # dropped tokens are zeros, not NaN
+
+
+def test_flash_attention_modes_agree(rng):
+    """heads / q_heads / cp / none modes compute identical attention."""
+    from repro.models.attention import attention_forward, attention_meta
+    from repro.models.params import init_params
+
+    cfg = get_smoke_config("mixtral_8x7b")
+    cfg = dataclasses.replace(cfg, n_heads=4, n_kv_heads=2, sliding_window=None)
+    meta = attention_meta(cfg, jnp.float32)
+    p = init_params(meta, KEY)
+    x = jax.random.normal(KEY, (2, 64, cfg.d_model), jnp.float32)
+    outs = {}
+    for mode in ["none", "heads", "q_heads", "cp"]:
+        c = dataclasses.replace(cfg, attn_shard_mode=mode, attn_chunk=16)
+        outs[mode] = attention_forward(p, c, x)
+    for mode in ["heads", "q_heads", "cp"]:
+        np.testing.assert_allclose(
+            outs[mode], outs["none"], atol=2e-5 * float(jnp.abs(outs["none"]).max())
+        )
+
+
+def test_param_counts_match_meta():
+    """config.param_counts() total must match the real meta tree count."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        meta_total = param_count(model_meta(cfg, 16))
+        est = cfg.param_counts()["total"]
+        # estimate ignores norms/small vectors; within 3%
+        assert abs(meta_total - est) / meta_total < 0.035, (arch, meta_total, est)
+
+
+def test_abstract_params_no_allocation():
+    cfg = get_config("qwen3_14b")  # 14B params — must NOT allocate
+    tree = abstract_params(model_meta(cfg, 16))
+    leaves = jax.tree_util.tree_leaves(tree)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    assert param_count(model_meta(cfg, 16)) > 13e9

@@ -1,0 +1,126 @@
+"""Multi-device tests — run in a subprocess with 8 fake CPU devices so the
+main test process keeps its single-device world (per the brief: the 512-
+device flag must never leak into tests)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_distributed_band_reduce_and_roots():
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.distributed import dist_band_reduce, sharded_inverse_roots
+        from repro.core import band_reduce
+        mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(3)
+        n, b, nb = 64, 4, 16
+        A0 = rng.normal(size=(n,n)).astype(np.float32); A = jnp.asarray(A0+A0.T)
+        B1 = dist_band_reduce(mesh, "x", A, b, nb)
+        B2 = band_reduce(A, b, nb)
+        err = float(jnp.abs(B1-B2).max())
+        assert err < 1e-4 * float(jnp.abs(B2).max()), err
+        G = rng.normal(size=(16, 16, 16)).astype(np.float32)
+        S = jnp.asarray(np.einsum('bij,bkj->bik', G, G) + 0.1*np.eye(16, dtype=np.float32))
+        R = sharded_inverse_roots(mesh, ("x",), S, 4, b=4, nb=8)
+        R0 = np.asarray(R[0], np.float64); S0 = np.asarray(S[0], np.float64)
+        err2 = np.abs(np.linalg.matrix_power(R0,4)@S0 - np.eye(16)).max()
+        assert err2 < 0.05, err2
+        print("DIST_OK", err, err2)
+    """)
+    assert "DIST_OK" in out
+
+
+def test_compressed_psum_multidevice():
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.optim import compressed_psum
+        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(16, 64)).astype(np.float32))
+        y = compressed_psum(mesh, "data", x)   # replicated input: mean == x
+        rel = float(jnp.abs(y - x).max() / jnp.abs(x).max())
+        assert rel < 0.02, rel
+        print("PSUM_OK", rel)
+    """)
+    assert "PSUM_OK" in out
+
+
+def test_sharded_train_step_smoke():
+    """A reduced arch train step under a 2x4 mesh with the full policy."""
+    out = run_sub("""
+        import dataclasses, numpy as np, jax, jax.numpy as jnp
+        from repro.configs import get_smoke_config
+        from repro.models import model_params, model_meta
+        from repro.optim import adamw
+        from repro.parallel.sharding import make_policy, resolve_attn_mode
+        from repro.parallel.hints import hint_resolver
+        from repro.train import make_train_step
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        cfg = get_smoke_config("llama3.2-3b")
+        cfg = dataclasses.replace(
+            cfg, n_heads=4, n_kv_heads=4, d_model=64, d_ff=128, vocab=256,
+            attn_shard_mode=resolve_attn_mode(cfg, 4))
+        policy = make_policy(mesh, cfg, fsdp=True)
+        params = model_params(cfg, jax.random.PRNGKey(0), model_axis=4)
+        opt = adamw(1e-3)
+        opt_state = opt.init(params)
+        step = make_train_step(cfg, opt)
+        B, S = 4, 64
+        batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+                 "labels": jnp.zeros((B, S), jnp.int32)}
+        param_sh = policy.param_shardings(model_meta(cfg, 4))
+        with hint_resolver(policy.resolver()):
+            jstep = jax.jit(step, in_shardings=(param_sh, None, None, None))
+            p2, s2, m = jstep(params, opt_state, batch, jnp.zeros((), jnp.int32))
+        assert np.isfinite(float(m["loss"]))
+        print("TRAIN_OK", float(m["loss"]))
+    """)
+    assert "TRAIN_OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_cell_small_mesh():
+    """The dry-run machinery end-to-end on a 2x4 mesh (fast)."""
+    out = run_sub("""
+        import os
+        os.environ["REPRO_DRYRUN_XLA"] = "--xla_force_host_platform_device_count=8"
+        import repro.launch.dryrun as dr
+        rec = dr.run_cell("mamba2-370m", "decode_32k", mesh_override=(2, 4))
+        assert rec["status"] == "ok", rec
+        assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+        assert rec["memory"]["peak_estimate_bytes"] > 0
+        print("DRYRUN_OK", rec["roofline"]["dominant"])
+    """)
+    assert "DRYRUN_OK" in out
+
+
+def test_skip_rule_for_long_context():
+    from repro.launch.specs import cell_applicable
+
+    assert cell_applicable("mamba2-370m", "long_500k")
+    assert cell_applicable("mixtral-8x7b", "long_500k")
+    assert cell_applicable("recurrentgemma-2b", "long_500k")
+    assert not cell_applicable("llama3.2-3b", "long_500k")
+    assert not cell_applicable("qwen3-14b", "long_500k")
+    assert cell_applicable("llama3.2-3b", "train_4k")

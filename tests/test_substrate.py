@@ -1,0 +1,221 @@
+"""Optimizers, data pipeline, checkpointing, train-loop fault tolerance."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (
+    adamw,
+    shampoo,
+    ShampooOptions,
+    apply_updates,
+    quantize_int8,
+    dequantize_int8,
+    ef_compress_transform,
+    warmup_cosine,
+)
+from repro.data import DataConfig, synthetic_batch, batch_for
+from repro.ckpt import CheckpointManager
+
+
+# ------------------------------------------------------------- optimizers
+def _quadratic(rng=None, n=24):
+    # Fixed local seed: the session rng fixture's draw order depends on which
+    # tests ran before, and optimizer-descent thresholds are seed-sensitive.
+    local = np.random.default_rng(42)
+    A = jnp.asarray(local.normal(size=(n, n)).astype(np.float32))
+    t = jnp.asarray(local.normal(size=(n, n)).astype(np.float32))
+
+    def loss(params):
+        return jnp.mean((A @ params["W"] - t) ** 2) + 0.05 * jnp.mean(params["b"] ** 2)
+
+    params = {"W": jnp.zeros((n, n), jnp.float32), "b": jnp.ones((n,), jnp.float32)}
+    return loss, params
+
+
+@pytest.mark.parametrize(
+    "make_opt",
+    [
+        lambda: adamw(1e-2),
+        lambda: shampoo(0.2, opts=ShampooOptions(block_size=8, update_interval=5, eigh_b=4, eigh_nb=8)),
+    ],
+    ids=["adamw", "shampoo"],
+)
+def test_optimizer_descends(rng, make_opt):
+    loss_fn, params = _quadratic(rng)
+    opt = make_opt()
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        l, g = jax.value_and_grad(loss_fn)(params)
+        u, state = opt.update(g, state, params)
+        return apply_updates(params, u), state, l
+
+    losses = []
+    for _ in range(60):
+        params, state, l = step(params, state)
+        losses.append(float(l))
+    assert losses[-1] < 0.5 * losses[0], losses[::10]
+    assert all(np.isfinite(losses))
+
+
+def test_shampoo_uses_paper_evd(rng, monkeypatch):
+    """The preconditioner refresh must go through repro.core.inverse_pth_root."""
+    import importlib
+
+    sh = importlib.import_module("repro.optim.shampoo")
+
+    calls = {"n": 0}
+    orig = sh.inverse_pth_root
+
+    def spy(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(sh, "inverse_pth_root", spy)
+    loss_fn, params = _quadratic(rng, n=16)
+    opt = sh.shampoo(0.1, opts=ShampooOptions(block_size=8, update_interval=2, eigh_b=4, eigh_nb=8))
+    state = opt.init(params)
+    g = jax.grad(loss_fn)(params)
+    opt.update(g, state, params)  # traced -> spy called during trace
+    assert calls["n"] > 0
+
+
+def test_warmup_cosine_schedule():
+    s = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert abs(float(s(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(s(jnp.asarray(100))) < 0.2
+
+
+def test_int8_quantization_roundtrip(rng):
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    q, s = quantize_int8(x)
+    x2 = dequantize_int8(q, s)
+    assert float(jnp.abs(x - x2).max()) < float(jnp.abs(x).max()) / 100
+
+
+def test_error_feedback_accumulates(rng):
+    """EF compression: quantization error is carried, not lost — the mean of
+    compressed grads converges to the mean of true grads."""
+    init, apply = ef_compress_transform()
+    g = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32)) * 1e-3
+    state = init({"g": g})
+    total_q = jnp.zeros_like(g)
+    for _ in range(50):
+        gq, state = apply({"g": g}, state)
+        total_q = total_q + gq["g"]
+    np.testing.assert_allclose(total_q / 50, g, atol=float(jnp.abs(g).max()) * 0.02)
+
+
+# ------------------------------------------------------------------ data
+def test_data_deterministic_and_resumable():
+    dc = DataConfig(vocab=128, seq_len=32, global_batch=4, seed=7)
+    b1 = batch_for(dc, 5)
+    b2 = batch_for(dc, 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = batch_for(dc, 6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next tokens
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    # tokens in range
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 128
+
+
+def test_data_device_side_generation():
+    dc = DataConfig(vocab=64, seq_len=16, global_batch=2)
+    f = jax.jit(lambda s: synthetic_batch(dc, s))
+    b = f(jnp.asarray(3, jnp.int32))
+    assert b["tokens"].shape == (2, 16)
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_keep_k(rng):
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, async_save=False)
+        tree = {"a": jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32)),
+                "b": {"c": jnp.arange(5)}}
+        for step in [1, 2, 3, 4]:
+            mgr.save(step, jax.tree_util.tree_map(lambda x: x + step, tree))
+        assert mgr.all_steps() == [3, 4]  # keep-2 GC
+        step, restored = mgr.restore_latest(tree)
+        assert step == 4
+        np.testing.assert_array_equal(
+            np.asarray(restored["a"]), np.asarray(tree["a"]) + 4
+        )
+
+
+def test_checkpoint_atomicity(rng):
+    """A stray tmp dir (simulated crash) is never listed as a checkpoint."""
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        tree = {"a": jnp.ones((2, 2))}
+        mgr.save(1, tree)
+        os.makedirs(os.path.join(d, "tmp.99"), exist_ok=True)  # crashed save
+        assert mgr.all_steps() == [1]
+        step, _ = mgr.restore_latest(tree)
+        assert step == 1
+
+
+def test_checkpoint_reshard_restore(rng):
+    """Restore onto explicit shardings (elastic path, 1-device degenerate)."""
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        tree = {"w": jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))}
+        mgr.save(1, tree)
+        mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        sh = {"w": jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data", None))}
+        restored = mgr.restore(1, tree, shardings=sh)
+        np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+        assert restored["w"].sharding == sh["w"]
+
+
+# -------------------------------------------------------------- train loop
+def _toy_loop(tmpdir, total=10, poison_step=None):
+    from repro.train import TrainLoop, TrainLoopConfig
+
+    w0 = {"w": jnp.ones((4,), jnp.float32)}
+    opt = adamw(0.1)
+    s0 = opt.init(w0)
+
+    def step_fn(params, opt_state, batch, step):
+        def loss_fn(p):
+            return jnp.sum((p["w"] - batch) ** 2)
+
+        l, g = jax.value_and_grad(loss_fn)(params)
+        u, opt_state = opt.update(g, opt_state, params)
+        return apply_updates(params, u), opt_state, {"loss": l}
+
+    def batch_fn(step):
+        if poison_step is not None and step == poison_step:
+            return jnp.full((4,), jnp.nan, jnp.float32)
+        return jnp.full((4,), 0.5, jnp.float32)
+
+    loop = TrainLoop(
+        jax.jit(step_fn),
+        batch_fn,
+        TrainLoopConfig(total_steps=total, ckpt_every=3, log_every=100, ckpt_dir=tmpdir),
+        log_fn=lambda m: None,
+    )
+    return loop.run(w0, s0)
+
+
+def test_train_loop_runs_and_resumes():
+    with tempfile.TemporaryDirectory() as d:
+        p, s, hist = _toy_loop(d, total=10)
+        assert len(hist) == 10 and hist[-1] < hist[0]
+        # second run resumes at the final checkpoint and does nothing more
+        p2, s2, hist2 = _toy_loop(d, total=10)
+        assert len(hist2) == 0
+
+
+def test_train_loop_nan_recovery():
+    with tempfile.TemporaryDirectory() as d:
+        p, s, hist = _toy_loop(d, total=10, poison_step=7)
+        # step 7 was skipped after rollback; loop still completed
+        assert len(hist) >= 8
+        assert all(np.isfinite(h) for h in hist)
