@@ -14,8 +14,8 @@ import jax
 import numpy as np
 import jax.numpy as jnp
 
+from repro.backend import registry
 from repro.core import band_reduce, chase_sequential, chase_wavefront
-from repro.kernels import bulge_chase
 from benchmarks.common import bench, emit
 
 
@@ -45,8 +45,17 @@ def run():
             f"wavefronts={W};avg_parallel_ops={avg_par:.1f};"
             f"ideal_speedup={total_ops/W:.1f};cpu1core_wall_ratio={t_seq/t_wav:.2f}",
         )
-        t_pal = bench(jax.jit(lambda M, b=b: bulge_chase(M, b)), B)
+        from repro.kernels.ops import bulge_uses_kernel
+
+        kernel = registry.resolve("bulge_chase", "pallas")
+        ran_kernel = bulge_uses_kernel(n)  # same decision bulge_chase makes
+        t_pal = bench(jax.jit(lambda M, b=b, kernel=kernel: kernel(M, b)), B)
         emit(
             f"bulge_pallas_n{n}_b{b}", t_pal,
-            f"interpret=cpu;vmem_resident=1",
+            f"path={'kernel' if ran_kernel else 'xla_fallback'};"
+            + (
+                f"interpret={'off' if registry.probe.is_tpu() else 'on'};"
+                f"vmem_resident={int(registry.probe.is_tpu())}"
+                if ran_kernel else "above_interpret_ceiling=1"
+            ),
         )

@@ -1,10 +1,13 @@
 """Paper Table 1 + Figure 8: SYR2K performance across shapes.
 
 Table 1 sweeps (n, k) for tall-skinny inputs; Fig 8 compares the proposed
-syr2k against the vendor baseline on square and tall-skinny shapes.  Here:
-Pallas triangular-tile kernel (interpret on CPU) vs the jnp/XLA baseline
-(full GEMM + symmetrize), plus the FLOP-savings ratio (the kernel does half
-the multiply work by touching only lower tiles).
+syr2k against the vendor baseline on square and tall-skinny shapes.  Both
+sides resolve through ``repro.backend.registry`` (the pipeline's dispatch
+point, with its per-platform tile defaults): the "pallas" backend is the
+triangular-tile kernel (interpret off-TPU), the "jnp" backend the XLA
+baseline (full GEMM + symmetrize).  The derived column reports the
+FLOP-savings ratio (the kernel does half the multiply work by touching only
+lower tiles).
 """
 from __future__ import annotations
 
@@ -12,8 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import syr2k
-from repro.kernels.ref import syr2k_ref
+from repro.backend import registry
 from benchmarks.common import bench, emit
 
 
@@ -31,13 +33,14 @@ def run():
         C = jnp.zeros((n, n), jnp.float32)
         flops = 2.0 * n * n * k  # useful syr2k flops (both products, symm)
 
-        t_ref = bench(jax.jit(lambda a, b, c: syr2k_ref(a, b, c)), A, B, C)
-        emit(f"syr2k_ref_n{n}_k{k}", t_ref, f"gflops={flops/t_ref/1e9:.2f}")
-        t_pal = bench(
-            jax.jit(lambda a, b, c: syr2k(a, b, c, bm=128, bk=min(k, 128))), A, B, C
-        )
-        emit(
-            f"syr2k_pallas_n{n}_k{k}", t_pal,
-            f"gflops={flops/t_pal/1e9:.2f};interpret=cpu;"
-            f"tile_flop_savings=0.5",
-        )
+        for backend in ("jnp", "pallas"):
+            fn = registry.resolve("syr2k", backend)
+            t = bench(jax.jit(lambda a, b, c, fn=fn: fn(a, b, c)), A, B, C)
+            extra = (
+                f";interpret={'off' if registry.probe.is_tpu() else 'on'}"
+                f";tile_flop_savings=0.5" if backend == "pallas" else ""
+            )
+            emit(
+                f"syr2k_{backend}_n{n}_k{k}", t,
+                f"gflops={flops/t/1e9:.2f}{extra}",
+            )

@@ -16,12 +16,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.backend.compat import make_mesh
 from repro.core import band_reduce
 from repro.core.distributed import dist_band_reduce, sharded_inverse_roots
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("x",))
     print(f"devices: {jax.device_count()}  mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     rng = np.random.default_rng(0)

@@ -1,0 +1,191 @@
+"""Kernel registry: ONE dispatch point from hot op -> implementation.
+
+The EVD pipeline has three hot ops (the paper's Table 1 decomposition):
+
+* ``trailing_update`` — the DBR rank-2·nb syr2k trailing update
+  (``C - Z Y^T - Y Z^T``), the compute-bound stage-1 workhorse.
+* ``syr2k``           — the general symmetric rank-2k update behind it.
+* ``bulge_chase``     — band -> tridiagonal wavefront chasing (values-only).
+* ``panel_qr``        — the WY-form panel factorization.
+
+Each op maps to one of two backends:
+
+* ``"pallas"`` — the Pallas TPU kernels in ``repro.kernels`` (compiled on
+  TPU, interpret-mode on CPU — see ``repro.backend.probe``), with
+  per-platform tile-size defaults chosen here.
+* ``"jnp"``    — the pure jnp/XLA reference path.  Always available; doubles
+  as the numerical-parity oracle for the Pallas path.
+
+Resolution order: programmatic override (:func:`set_backend` /
+:func:`use_backend`) > ``REPRO_KERNEL_BACKEND`` env var > ``"pallas"``
+whenever Pallas is importable.  Future backends (GPU pallas, pure-XLA
+variants, distributed) plug in via :func:`register`.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+from typing import Callable, Dict, Optional, Tuple
+
+from . import probe
+
+__all__ = [
+    "ENV_VAR",
+    "BACKENDS",
+    "OPS",
+    "default_backend",
+    "set_backend",
+    "use_backend",
+    "resolve",
+    "register",
+    "tile_defaults",
+]
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+BACKENDS = ("pallas", "jnp")  # built-ins; register() can add more names
+OPS = ("trailing_update", "syr2k", "bulge_chase", "panel_qr")
+
+_override: Optional[str] = None
+_extra_backends: set = set()
+
+# Per-platform tile-size defaults for the tiled kernels.  TPU tiles follow
+# the paper (256 = 2 MXU lanes per side); interpret-mode platforms use
+# smaller tiles so emulated grids stay cheap on the small problems CPUs run.
+_TILE_DEFAULTS = {
+    "tpu": {
+        "syr2k": dict(bm=256, bk=256),
+        "trailing_update": dict(bm=256, bk=256),
+    },
+    None: {  # any non-TPU platform (interpret mode)
+        "syr2k": dict(bm=128, bk=128),
+        "trailing_update": dict(bm=128, bk=128),
+    },
+}
+
+
+def tile_defaults(op: str, platform: Optional[str] = None) -> dict:
+    """Default tile sizes for ``op`` on ``platform`` (default: the live one)."""
+    plat = probe.platform() if platform is None else platform
+    table = _TILE_DEFAULTS.get(plat, _TILE_DEFAULTS[None])
+    return dict(table.get(op, {}))
+
+
+def _validate(backend: str) -> str:
+    if backend not in BACKENDS and backend not in _extra_backends:
+        known = tuple(BACKENDS) + tuple(sorted(_extra_backends))
+        raise ValueError(f"unknown kernel backend {backend!r}; expected one of {known}")
+    return backend
+
+
+def default_backend() -> str:
+    """The backend ops resolve to when no explicit backend is requested."""
+    if _override is not None:
+        return _override
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return _validate(env)
+    return "pallas" if probe.pallas_available() else "jnp"
+
+
+def set_backend(backend: Optional[str]) -> None:
+    """Process-wide programmatic override (``None`` restores env/auto)."""
+    global _override
+    _override = None if backend is None else _validate(backend)
+
+
+@contextmanager
+def use_backend(backend: Optional[str]):
+    """Scoped backend override (trace-time dispatch; use around jit entry)."""
+    global _override
+    prev = _override
+    set_backend(backend)
+    try:
+        yield
+    finally:
+        _override = prev
+
+
+# ------------------------------------------------------------ implementations
+_IMPLS: Dict[Tuple[str, str], Callable] = {}
+_built = False
+
+
+def register(op: str, backend: str, fn: Callable) -> None:
+    """Register/replace an implementation (the future-backend plug point).
+
+    A backend name registered here becomes valid for :func:`resolve`,
+    :func:`set_backend`, and the env var.
+    """
+    if op not in OPS:
+        raise KeyError(f"unknown op {op!r}; expected one of {OPS}")
+    if backend not in BACKENDS:
+        _extra_backends.add(backend)
+    _IMPLS[(op, backend)] = fn
+
+
+def _build_impls() -> None:
+    # Deferred so that importing repro.backend never drags in the kernels
+    # (and to break the kernels -> compat -> registry import cycle).
+    global _built
+    from repro.kernels import ref as kref
+    from repro.core.bulge_chasing import chase_wavefront
+    from repro.core.panel_qr import panel_qr_geqrf
+
+    def jnp_bulge_chase(B, b):
+        return chase_wavefront(B, b)
+
+    def default(op, backend, fn):
+        # setdefault semantics: a register() call made before the first
+        # resolve (the documented plug point) must not be clobbered.
+        if (op, backend) not in _IMPLS:
+            register(op, backend, fn)
+
+    default("trailing_update", "jnp", kref.trailing_update_ref)
+    default("syr2k", "jnp", kref.syr2k_ref)
+    default("bulge_chase", "jnp", jnp_bulge_chase)
+    default("panel_qr", "jnp", panel_qr_geqrf)
+
+    if probe.pallas_available():
+        from repro.kernels import ops as kops
+
+        def pallas_trailing_update(C, Y, Z):
+            return kops.trailing_update(C, Y, Z, **tile_defaults("trailing_update"))
+
+        def pallas_syr2k(A, B, C=None, *, alpha: float = 1.0):
+            return kops.syr2k(A, B, C, alpha=alpha, **tile_defaults("syr2k"))
+
+        default("trailing_update", "pallas", pallas_trailing_update)
+        default("syr2k", "pallas", pallas_syr2k)
+        default("bulge_chase", "pallas", kops.bulge_chase)
+        default("panel_qr", "pallas", kops.panel_qr)
+
+    # Only mark built on success: a failed import above propagates, stays
+    # unbuilt, and is retried (surfacing the real error) on the next resolve.
+    _built = True
+
+
+def resolve(op: str, backend: Optional[str] = None) -> Callable:
+    """Resolve ``op`` to a callable for ``backend`` (default: the active one).
+
+    Resolution happens at trace time — inside ``jit`` the chosen kernel is
+    baked into the compiled program, so overrides must wrap the jit entry.
+    """
+    if op not in OPS:
+        raise KeyError(f"unknown op {op!r}; expected one of {OPS}")
+    if backend is None:
+        be = default_backend()
+        if be == "pallas" and not probe.pallas_available():
+            be = "jnp"  # graceful degradation: the reference path always exists
+    else:
+        # An explicit backend request must not be silently downgraded —
+        # parity tests would compare the oracle against itself.
+        be = _validate(backend)
+    if not _built:
+        _build_impls()
+    impl = _IMPLS.get((op, be))
+    if impl is None:
+        raise KeyError(
+            f"no implementation registered for op {op!r} on backend {be!r}"
+            f" (registered: {sorted(k for k in _IMPLS if k[0] == op)})"
+        )
+    return impl

@@ -23,8 +23,11 @@ the form that maps best onto XLA/TPU (one growing-k GEMM instead of a
 recursion tree of launches).  See DESIGN.md §2.
 
 Shapes are static per block (Python loop over blocks with shrinking trailing
-views), so everything jits and vmaps; the trailing update is pluggable so the
-Pallas ``syr2k`` kernel can be swapped in for the jnp reference.
+views), so everything jits and vmaps.  The trailing update and panel
+factorization are resolved through ``repro.backend.registry`` at trace time,
+so the Pallas ``syr2k`` kernel is the default hot path (interpret-mode on
+CPU, compiled on TPU) with the jnp reference as the always-available
+fallback; pass ``syr2k_update=`` only to inject a custom callable.
 """
 from __future__ import annotations
 
@@ -34,6 +37,8 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.backend import registry
 
 from .panel_qr import panel_qr_geqrf, panel_qr_householder
 
@@ -64,11 +69,6 @@ class BandReflectors:
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
-
-
-def _syr2k_update_jnp(C: jax.Array, Y: jax.Array, Z: jax.Array) -> jax.Array:
-    """Reference trailing update: C - Z Y^T - Y Z^T (full, symmetric)."""
-    return C - Z @ Y.T - Y @ Z.T
 
 
 def _reduce_block(
@@ -140,7 +140,7 @@ def band_reduce(
     nb: Optional[int] = None,
     *,
     panel_method: str = "geqrf",
-    syr2k_update: Callable = _syr2k_update_jnp,
+    syr2k_update: Optional[Callable] = None,
     return_reflectors: bool = False,
 ):
     """Reduce a symmetric matrix to band form with bandwidth ``b``.
@@ -151,9 +151,10 @@ def band_reduce(
       A: (n, n) symmetric.  ``n`` must be a multiple of ``b``.
       b: target bandwidth (panel width).
       nb: update block size (multiple of ``b``); defaults to ``b`` (SBR).
-      panel_method: "geqrf" | "householder".
-      syr2k_update: callable (C, Y, Z) -> C - Z Y^T - Y Z^T; swap in the
-        Pallas kernel here.
+      panel_method: "geqrf" | "householder" | "pallas" (registry kernel).
+      syr2k_update: callable (C, Y, Z) -> C - Z Y^T - Y Z^T.  Default: the
+        active ``repro.backend.registry`` trailing-update kernel (Pallas
+        syr2k unless ``REPRO_KERNEL_BACKEND=jnp``).
       return_reflectors: also return :class:`BandReflectors` for Q1.
 
     Returns:
@@ -166,7 +167,16 @@ def band_reduce(
     if nb % b != 0:
         raise ValueError(f"nb={nb} must be a multiple of b={b}")
 
-    panel_qr_fn = panel_qr_geqrf if panel_method == "geqrf" else panel_qr_householder
+    if syr2k_update is None:
+        syr2k_update = registry.resolve("trailing_update")
+    if panel_method == "geqrf":
+        panel_qr_fn = panel_qr_geqrf
+    elif panel_method == "householder":
+        panel_qr_fn = panel_qr_householder
+    elif panel_method == "pallas":
+        panel_qr_fn = registry.resolve("panel_qr", "pallas")
+    else:
+        raise ValueError(f"unknown panel_method: {panel_method!r}")
 
     dtype = A.dtype
     B = A

@@ -234,8 +234,18 @@ def band_to_tridiag(
     method: str = "wavefront",
     return_log: bool = False,
 ):
-    """Reduce a symmetric band matrix (dense storage) to tridiagonal form."""
+    """Reduce a symmetric band matrix (dense storage) to tridiagonal form.
+
+    The values-only wavefront path (``return_log=False``) dispatches through
+    ``repro.backend.registry`` so the VMEM-resident Pallas kernel is the
+    default; the eigenvector path needs the reflector log, which only the
+    XLA executors emit.
+    """
     if method == "wavefront":
+        if not return_log:
+            from repro.backend import registry
+
+            return registry.resolve("bulge_chase")(B, b)
         return chase_wavefront(B, b, return_log)
     if method == "sequential":
         return chase_sequential(B, b, return_log)

@@ -26,7 +26,9 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.backend import registry
+from repro.backend.compat import shard_map
 
 from .eigh import eigh, inverse_pth_root
 
@@ -151,8 +153,8 @@ def dist_band_reduce(
                 mesh, axis, view[w:, w:], Vbuf[w:, :], Zbuf[w:, :]
             )
         else:  # trailing block smaller than the device ring: run locally
-            trailing = (
-                view[w:, w:] - Zbuf[w:, :] @ Vbuf[w:, :].T - Vbuf[w:, :] @ Zbuf[w:, :].T
+            trailing = registry.resolve("trailing_update", "jnp")(
+                view[w:, w:], Vbuf[w:, :], Zbuf[w:, :]
             )
         view = view.at[w:, w:].set(trailing)
         view = view.at[:, :w].set(F)

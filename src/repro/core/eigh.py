@@ -9,6 +9,11 @@ Methods:
   * ``direct``     — one-stage Householder tridiagonalization baseline
   * ``jacobi``     — dense parallel Jacobi baseline (no tridiagonalization)
 
+The two-stage hot path resolves its kernels (trailing syr2k update, bulge
+chase) through ``repro.backend.registry`` at trace time: Pallas by default,
+``REPRO_KERNEL_BACKEND=jnp`` (or ``repro.backend.use_backend``) forces the
+reference path.
+
 Also provides ``inverse_pth_root`` — the Shampoo-facing consumer of the
 solver — and batched wrappers used by the distributed optimizer.
 """
@@ -19,6 +24,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.backend import registry
 
 from .band_reduction import band_reduce, apply_q_left
 from .bulge_chasing import band_to_tridiag, apply_q2, extract_tridiag
@@ -82,12 +89,17 @@ def tridiagonalize(
             return d, e, ("direct", refl)
         return d, e
 
+    if not return_reflectors:
+        # Values-only fast path: no reflector log, so the bulge chase can
+        # dispatch to the VMEM-resident Pallas kernel via the registry.
+        Bband = band_reduce(A, b_, nb_)
+        T = band_to_tridiag(Bband, b_, method=chase)
+        return extract_tridiag(T)
+
     Bband, refl1 = band_reduce(A, b_, nb_, return_reflectors=True)
     T, log2 = band_to_tridiag(Bband, b_, method=chase, return_log=True)
     d, e = extract_tridiag(T)
-    if return_reflectors:
-        return d, e, ("two_stage", (refl1, log2))
-    return d, e
+    return d, e, ("two_stage", (refl1, log2))
 
 
 def _backtransform(kind_refl, X: jax.Array) -> jax.Array:
@@ -102,8 +114,43 @@ def _backtransform(kind_refl, X: jax.Array) -> jax.Array:
 
 @partial(
     jax.jit,
-    static_argnames=("b", "nb", "method", "chase", "eigenvectors", "max_sweeps"),
+    static_argnames=(
+        "b", "nb", "method", "chase", "eigenvectors", "max_sweeps", "kernel_backend",
+    ),
 )
+def _eigh_jit(
+    A: jax.Array,
+    *,
+    b: Optional[int],
+    nb: Optional[int],
+    method: str,
+    chase: str,
+    eigenvectors: bool,
+    max_sweeps: int,
+    kernel_backend: str,
+):
+    # The backend is part of the jit cache key, so a registry override after
+    # a previous same-shape trace still takes effect; the scoped pin below
+    # makes the trace-time dispatch match the key.
+    with registry.use_backend(kernel_backend):
+        A = 0.5 * (A + A.T)  # enforce symmetry
+        if method == "jacobi":
+            w, V = jacobi_eigh(A, max_sweeps=max_sweeps)
+            return (w, V) if eigenvectors else w
+
+        if not eigenvectors:
+            d, e = tridiagonalize(A, b=b, nb=nb, method=method, chase=chase)
+            return eigvalsh_tridiag(d, e)
+
+        d, e, refl = tridiagonalize(
+            A, b=b, nb=nb, method=method, chase=chase, return_reflectors=True
+        )
+        w = eigvalsh_tridiag(d, e)
+        VT = eigvecs_inverse_iteration(d, e, w)
+        V = _backtransform(refl, VT)
+        return w, V
+
+
 def eigh(
     A: jax.Array,
     *,
@@ -118,22 +165,16 @@ def eigh(
 
     Returns ``w`` or ``(w, V)`` with ``A @ V ≈ V @ diag(w)``.
     """
-    A = 0.5 * (A + A.T)  # enforce symmetry
-    if method == "jacobi":
-        w, V = jacobi_eigh(A, max_sweeps=max_sweeps)
-        return (w, V) if eigenvectors else w
-
-    if not eigenvectors:
-        d, e = tridiagonalize(A, b=b, nb=nb, method=method, chase=chase)
-        return eigvalsh_tridiag(d, e)
-
-    d, e, refl = tridiagonalize(
-        A, b=b, nb=nb, method=method, chase=chase, return_reflectors=True
+    return _eigh_jit(
+        A,
+        b=b,
+        nb=nb,
+        method=method,
+        chase=chase,
+        eigenvectors=eigenvectors,
+        max_sweeps=max_sweeps,
+        kernel_backend=registry.default_backend(),
     )
-    w = eigvalsh_tridiag(d, e)
-    VT = eigvecs_inverse_iteration(d, e, w)
-    V = _backtransform(refl, VT)
-    return w, V
 
 
 def eigvalsh(A: jax.Array, **kw) -> jax.Array:
@@ -149,7 +190,26 @@ def eigh_batched(A: jax.Array, **kw):
     return w.reshape(batch_shape + (n,)), V.reshape(batch_shape + (n, n))
 
 
-@partial(jax.jit, static_argnames=("p", "method", "b", "nb"))
+@partial(jax.jit, static_argnames=("p", "method", "b", "nb", "kernel_backend"))
+def _inverse_pth_root_jit(
+    A: jax.Array,
+    p: int,
+    *,
+    eps: float,
+    method: str,
+    b: Optional[int],
+    nb: Optional[int],
+    kernel_backend: str,
+) -> jax.Array:
+    with registry.use_backend(kernel_backend):
+        w, V = eigh(A, method=method, b=b, nb=nb, eigenvectors=True)
+        wmax = jnp.maximum(jnp.max(w), 0.0)
+        ridge = eps * jnp.maximum(wmax, 1e-30)
+        w_safe = jnp.maximum(w, 0.0) + ridge
+        root = jnp.power(w_safe, -1.0 / p)
+        return (V * root[None, :]) @ V.T
+
+
 def inverse_pth_root(
     A: jax.Array,
     p: int,
@@ -164,9 +224,7 @@ def inverse_pth_root(
     Eigenvalues are ridged by ``eps * max(w)`` before the root, matching
     distributed-Shampoo practice.
     """
-    w, V = eigh(A, method=method, b=b, nb=nb, eigenvectors=True)
-    wmax = jnp.maximum(jnp.max(w), 0.0)
-    ridge = eps * jnp.maximum(wmax, 1e-30)
-    w_safe = jnp.maximum(w, 0.0) + ridge
-    root = jnp.power(w_safe, -1.0 / p)
-    return (V * root[None, :]) @ V.T
+    return _inverse_pth_root_jit(
+        A, p, eps=eps, method=method, b=b, nb=nb,
+        kernel_backend=registry.default_backend(),
+    )

@@ -4,10 +4,11 @@
   bulge   — VMEM-resident wavefront bulge chasing (paper §4.2/§5.3)
   panel   — fused Householder panel QR in WY form (paper §5.1 panel factor)
 
-Use via ``repro.kernels.ops``; oracles in ``repro.kernels.ref``.
-Kernels execute with ``interpret=True`` on CPU (validation) and compile on
-real TPUs.
+The framework resolves these through ``repro.backend.registry`` (which also
+owns the interpret-mode decision and tile defaults); oracles live in
+``repro.kernels.ref``.  Kernels execute with ``interpret=True`` off-TPU
+(validation) and compile on real TPUs.
 """
-from .ops import syr2k, trailing_update, bulge_chase, panel_qr, use_interpret
+from .ops import syr2k, trailing_update, bulge_chase, panel_qr
 
-__all__ = ["syr2k", "trailing_update", "bulge_chase", "panel_qr", "use_interpret"]
+__all__ = ["syr2k", "trailing_update", "bulge_chase", "panel_qr"]

@@ -31,8 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.backend.compat import tpu_compiler_params, ARBITRARY
 from repro.core.bulge_chasing import _pad_sizes, num_wavefronts, max_active_sweeps
 
 __all__ = ["bulge_chase_pallas"]
@@ -128,8 +128,8 @@ def bulge_chase_pallas(B: jax.Array, b: int, *, interpret: bool = False) -> jax.
         in_specs=[pl.BlockSpec((total, total), lambda w: (0, 0))],
         out_specs=pl.BlockSpec((total, total), lambda w: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((total, total), B.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.ARBITRARY,),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=(ARBITRARY,),
         ),
         interpret=interpret,
         name="bulge_chase_wavefront",

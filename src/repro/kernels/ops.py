@@ -1,14 +1,16 @@
 """jit-facing wrappers around the Pallas kernels.
 
 Responsibilities:
-* interpret-mode dispatch: on CPU backends the kernels execute with
-  ``interpret=True`` (the brief's validation mode); on TPU they compile.
+* interpret-mode dispatch: anywhere that is not a real TPU the kernels
+  execute with ``interpret=True`` (the brief's validation mode); on TPU they
+  compile.  The decision lives in ``repro.backend.probe``.
 * shape normalization: pad to tile multiples, slice back.
 * symmetrization: the syr2k kernel writes lower tiles only; wrappers
   reconstruct the full symmetric result.
 
-These are the functions the rest of the framework imports; nothing outside
-``repro.kernels`` calls ``pl.pallas_call`` directly.
+Nothing outside ``repro.kernels`` calls ``pl.pallas_call`` directly, and
+nothing outside this package should call these wrappers directly either —
+the framework resolves kernels through ``repro.backend.registry``.
 """
 from __future__ import annotations
 
@@ -18,26 +20,29 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.backend import probe
+
 from .syr2k import syr2k_lower_pallas
 from .bulge import bulge_chase_pallas
 from .panel import panel_qr_pallas
 
 __all__ = [
-    "use_interpret",
     "syr2k",
     "trailing_update",
     "bulge_chase",
+    "bulge_uses_kernel",
     "panel_qr",
     "BULGE_VMEM_MAX_N",
+    "BULGE_INTERPRET_MAX_N",
 ]
 
 # fp32 VMEM ceiling for the VMEM-resident bulge kernel (see kernels/bulge.py).
 BULGE_VMEM_MAX_N = 1408
-
-
-def use_interpret() -> bool:
-    """Pallas interpret mode: on for CPU (validation), off on real TPUs."""
-    return jax.default_backend() != "tpu"
+# Interpret-mode ceiling: off-TPU the kernel exists for validation only (no
+# VMEM to be resident in), and the emulated grid unrolls all 3(n-3)+1
+# wavefronts into the traced program — so above the validation sizes fall
+# back to the XLA wavefront executor (same schedule, scan-rolled).
+BULGE_INTERPRET_MAX_N = 64
 
 
 def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
@@ -68,7 +73,7 @@ def syr2k(
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Full symmetric ``C + alpha (A B^T + B A^T)`` via the lower-tile kernel."""
-    interpret = use_interpret() if interpret is None else interpret
+    interpret = probe.interpret_mode() if interpret is None else interpret
     n, k = A.shape
     bm = min(bm, max(8, 1 << (n - 1).bit_length()))
     bk = min(bk, max(8, 1 << (k - 1).bit_length()))
@@ -91,19 +96,35 @@ def trailing_update(
     return syr2k(Z, Y, C, alpha=-1.0, **kw)
 
 
+def bulge_uses_kernel(n: int, *, interpret: Optional[bool] = None) -> bool:
+    """Whether :func:`bulge_chase` at size ``n`` runs the Pallas kernel
+    (True) or the XLA wavefront fallback (False).  Single source of truth
+    for the dispatch decision — benchmarks/diagnostics must use this rather
+    than re-deriving the ceilings.
+    """
+    explicit = interpret is not None
+    interp = probe.interpret_mode() if interpret is None else interpret
+    ceiling = BULGE_INTERPRET_MAX_N if (interp and not explicit) else BULGE_VMEM_MAX_N
+    return n <= ceiling
+
+
 def bulge_chase(B: jax.Array, b: int, *, interpret: Optional[bool] = None) -> jax.Array:
     """Band -> tridiagonal via the VMEM-resident wavefront kernel; falls back
-    to the XLA wavefront executor above the VMEM ceiling."""
-    interpret = use_interpret() if interpret is None else interpret
-    n = B.shape[0]
-    if n > BULGE_VMEM_MAX_N:
+    to the XLA wavefront executor above the VMEM ceiling.
+
+    The interpret-mode ceiling applies only when interpretation is implied by
+    the platform; an EXPLICIT ``interpret=True`` (validation of the kernel
+    itself) runs the kernel up to the VMEM ceiling regardless of cost.
+    """
+    if not bulge_uses_kernel(B.shape[0], interpret=interpret):
         from repro.core.bulge_chasing import chase_wavefront
 
         return chase_wavefront(B, b)
+    interpret = probe.interpret_mode() if interpret is None else interpret
     return bulge_chase_pallas(B, b, interpret=interpret)
 
 
 def panel_qr(panel: jax.Array, *, interpret: Optional[bool] = None):
     """Fused panel QR (V, T, taus, R)."""
-    interpret = use_interpret() if interpret is None else interpret
+    interpret = probe.interpret_mode() if interpret is None else interpret
     return panel_qr_pallas(panel, interpret=interpret)

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.backend.compat import tpu_compiler_params, PARALLEL, ARBITRARY
+
 __all__ = ["syr2k_lower_pallas", "lower_tile_indices"]
 
 
@@ -118,8 +120,8 @@ def syr2k_lower_pallas(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, n), C.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=(PARALLEL, ARBITRARY),
         ),
         interpret=interpret,
         name="syr2k_lower",

@@ -62,12 +62,11 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False, overrides=None,
         cfg = dataclasses.replace(cfg, **overrides)
     info = SHAPES[shape]
     if mesh_override is not None:
+        from repro.backend.compat import make_mesh
+
         shape_t = tuple(mesh_override)
         axes = ("pod", "data", "model")[-len(shape_t):]
-        mesh = jax.make_mesh(
-            shape_t, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(shape_t),
-        )
+        mesh = make_mesh(shape_t, axes)
         multi_pod = "pod" in axes
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
@@ -193,8 +192,10 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False, overrides=None,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
+    from repro.backend.compat import cost_analysis
+
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     hlo = compiled.as_text()
     colls = collective_bytes_from_hlo(hlo)
     walk = analyze_hlo(hlo, top=12)

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.backend.compat import make_mesh
+
 __all__ = ["make_production_mesh", "make_local_mesh", "SINGLE_POD", "MULTI_POD"]
 
 SINGLE_POD = (16, 16)
@@ -18,17 +20,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
     shape = MULTI_POD if multi_pod else SINGLE_POD
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model: int = 1):
     """A mesh over whatever devices exist (tests / examples)."""
     n = jax.device_count()
     assert n % model == 0
-    return jax.make_mesh(
-        (n // model, model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
-    )
+    return make_mesh((n // model, model), ("data", "model"))

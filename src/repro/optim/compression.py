@@ -20,8 +20,9 @@ from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.backend.compat import shard_map
 
 __all__ = ["quantize_int8", "dequantize_int8", "compressed_psum", "ef_compress_transform"]
 

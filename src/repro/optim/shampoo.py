@@ -6,7 +6,10 @@ R = EMA[G^T G].  The inverse fourth roots are symmetric-EVD problems — the
 exact workload the paper accelerates — computed here by
 ``repro.core.inverse_pth_root`` (DBR band reduction -> wavefront bulge
 chasing -> bisection), batched over ALL parameter blocks at once and
-optionally sharded over the mesh with ``shard_map``.
+optionally sharded over the mesh with the compat ``shard_map``
+(``repro.backend.compat``).  The solver's kernels resolve through
+``repro.backend.registry``; ``ShampooOptions.kernel_backend`` pins them
+("pallas" | "jnp") for this optimizer regardless of the process default.
 
 Layout: every eligible parameter is cut into (block, block) tiles; all tiles
 across the whole model are stacked into ONE (NB, bs, bs) batch so the solver
@@ -26,6 +29,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .base import Optimizer, clip_by_global_norm
+from repro.backend import registry
 from repro.core.eigh import inverse_pth_root
 
 __all__ = ["shampoo", "ShampooState", "ShampooOptions"]
@@ -46,6 +50,7 @@ class ShampooOptions:
     eigh_method: str = "two_stage"  # two_stage | jacobi
     batch_pad: int = 512            # pad NB so stats shard on any mesh
     precond_mesh: Any = None        # optional (mesh, axes) to shard the EVD batch
+    kernel_backend: Optional[str] = None  # pin registry backend (pallas|jnp)
 
 
 class ShampooState(NamedTuple):
@@ -174,7 +179,13 @@ def shampoo(
                 )
             return jax.vmap(f)(batch)
 
-        return solve(stats)
+        # Kernel dispatch happens at trace time, so pinning the backend here
+        # covers the whole solver trace.  No pin requested -> leave whatever
+        # process-wide override is active untouched.
+        if opts.kernel_backend is None:
+            return solve(stats)
+        with registry.use_backend(opts.kernel_backend):
+            return solve(stats)
 
     def update(grads, state, params):
         paths, gleaves, treedef = _flatten_with_paths(grads)

@@ -7,6 +7,58 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+# --------------------------------------------------------------- hypothesis
+# The property-based tests degrade gracefully when hypothesis is absent
+# (it lives in the `test` extra: `pip install -e .[test]`): `hypothesis_or_stub`
+# returns either the real (given, settings, st) triple or a deterministic
+# stand-in that runs each property test over the corners + midpoint of every
+# `st.integers` strategy.  Coverage shrinks but nothing errors at collection.
+try:
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def hypothesis_or_stub():
+    if HAVE_HYPOTHESIS:
+        from hypothesis import given, settings, strategies as st
+
+        return given, settings, st
+
+    class _IntStrategy(tuple):
+        pass
+
+    class _StubStrategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _IntStrategy((lo, hi))
+
+    def _stub_settings(**_kw):
+        return lambda f: f
+
+    def _stub_given(*specs):
+        for spec in specs:
+            if not isinstance(spec, _IntStrategy):
+                raise TypeError("stub `given` only supports st.integers(lo, hi)")
+
+        def deco(f):
+            def wrapper():
+                import itertools
+
+                draws = [sorted({lo, (lo + hi) // 2, hi}) for lo, hi in specs]
+                for combo in itertools.product(*draws):
+                    f(*combo)
+
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+
+        return deco
+
+    return _stub_given, _stub_settings, _StubStrategies()
+
 
 @pytest.fixture(scope="session")
 def rng():

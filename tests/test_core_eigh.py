@@ -4,7 +4,9 @@ import pytest
 import scipy.linalg as sla
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_stub
+
+given, settings, st = hypothesis_or_stub()
 
 from repro.core import (
     eigvalsh_tridiag,

@@ -3,7 +3,9 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_stub
+
+given, settings, st = hypothesis_or_stub()
 
 from repro.core import (
     house,

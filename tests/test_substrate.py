@@ -167,7 +167,9 @@ def test_checkpoint_reshard_restore(rng):
         mgr = CheckpointManager(d, async_save=False)
         tree = {"w": jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))}
         mgr.save(1, tree)
-        mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.backend.compat import make_mesh
+
+        mesh = make_mesh((1,), ("data",))
         sh = {"w": jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data", None))}
         restored = mgr.restore(1, tree, shardings=sh)
         np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
