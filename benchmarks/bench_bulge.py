@@ -16,12 +16,13 @@ import jax.numpy as jnp
 
 from repro.backend import registry
 from repro.core import band_reduce, chase_sequential, chase_wavefront
-from benchmarks.common import bench, emit
+from benchmarks.common import bench, emit, is_smoke
 
 
 def run():
     rng = np.random.default_rng(2)
-    for n, b in [(128, 4), (256, 4), (256, 8), (384, 8)]:
+    cases = [(128, 4)] if is_smoke() else [(128, 4), (256, 4), (256, 8), (384, 8)]
+    for n, b in cases:
         A0 = rng.normal(size=(n, n)).astype(np.float32)
         A = jnp.asarray(A0 + A0.T)
         B = jax.jit(lambda M, b=b: band_reduce(M, b, 4 * b))(A)
@@ -39,11 +40,13 @@ def run():
         total_ops = int((_kmax_table(n, b) + 1).sum())
         W = num_wavefronts(n, b)
         avg_par = total_ops / max(W, 1)
-        emit(f"bulge_sequential_n{n}_b{b}", t_seq, f"serial_steps={total_ops}")
+        emit(f"bulge_sequential_n{n}_b{b}", t_seq, f"serial_steps={total_ops}",
+             op="bulge_chase", n=n, backend="jnp")
         emit(
             f"bulge_wavefront_n{n}_b{b}", t_wav,
             f"wavefronts={W};avg_parallel_ops={avg_par:.1f};"
             f"ideal_speedup={total_ops/W:.1f};cpu1core_wall_ratio={t_seq/t_wav:.2f}",
+            op="bulge_chase", n=n, backend="jnp",
         )
         from repro.kernels.ops import bulge_uses_kernel
 
@@ -58,4 +61,5 @@ def run():
                 f"vmem_resident={int(registry.probe.is_tpu())}"
                 if ran_kernel else "above_interpret_ceiling=1"
             ),
+            op="bulge_chase", n=n, backend="pallas",
         )

@@ -13,10 +13,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import band_reduce, chase_wavefront
-from benchmarks.common import bench, emit
+from benchmarks.common import bench, emit, is_smoke
 
 
 def run(n: int = 256):
+    if is_smoke():
+        n = 128
     rng = np.random.default_rng(1)
     A0 = rng.normal(size=(n, n)).astype(np.float32)
     A = jnp.asarray(A0 + A0.T)
@@ -35,4 +37,5 @@ def run(n: int = 256):
                 f"{kind.lower()}_n{n}_b{b}_nb{nb}", t_br,
                 f"bulge_chase_us={t_bc*1e6:.1f};total_us={(t_br+t_bc)*1e6:.1f};"
                 f"update_k={nb}",
+                op="band_reduce", n=n,
             )

@@ -3,6 +3,10 @@
 Baselines: jnp.linalg.eigh (LAPACK on CPU — the vendor-library stand-in)
 and the parallel Jacobi solver.  Both eigenvalues-only (the paper's Fig 11
 setting) and full eigenvectors.  Correctness is asserted on every run.
+
+Solver calls go through the plan API (one cached EvdPlan per (n, config)),
+including a partial-spectrum row: ``by_count(8)`` runs 8 inverse-iteration
+lanes instead of n — the eigenvector-phase win partial plans buy.
 """
 from __future__ import annotations
 
@@ -10,19 +14,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import eigh, eigvalsh, jacobi_eigh
-from benchmarks.common import bench, emit
+from repro.core import jacobi_eigh
+from repro.solver import EvdConfig, by_count, plan
+from benchmarks.common import bench, emit, is_smoke
 
 
 def run():
     rng = np.random.default_rng(4)
-    for n in (128, 256):
+    sizes = (64,) if is_smoke() else (128, 256)
+    for n in sizes:
         A0 = rng.normal(size=(n, n)).astype(np.float32)
         A = jnp.asarray(A0 + A0.T)
         b, nb = 8, min(64, n // 4)
+        pl = plan(n, jnp.float32, EvdConfig(b=b, nb=nb))
 
         f_lapack = jax.jit(lambda M: jnp.linalg.eigvalsh(M))
-        f_ours = jax.jit(lambda M: eigvalsh(M, b=b, nb=nb))
+        f_ours = pl.eigvals
         f_jac = jax.jit(lambda M: jacobi_eigh(M)[0])
 
         w_ref = np.sort(np.asarray(f_lapack(A)))
@@ -33,19 +40,39 @@ def run():
         t_lap = bench(f_lapack, A)
         t_ours = bench(f_ours, A)
         t_jac = bench(f_jac, A)
-        emit(f"evd_vals_lapack_n{n}", t_lap, "")
-        emit(f"evd_vals_two_stage_n{n}", t_ours, f"rel_err={err:.1e}")
-        emit(f"evd_vals_jacobi_n{n}", t_jac, "")
+        emit(f"evd_vals_lapack_n{n}", t_lap, "", op="eigvalsh", n=n, backend="lapack")
+        emit(f"evd_vals_two_stage_n{n}", t_ours, f"rel_err={err:.1e}",
+             op="eigvalsh", n=n, backend=pl.backend)
+        emit(f"evd_vals_jacobi_n{n}", t_jac, "", op="eigvalsh", n=n, backend="jnp")
 
         # full EVD with eigenvectors
-        f_full = jax.jit(lambda M: eigh(M, b=b, nb=nb)[1])
+        f_full = jax.jit(lambda M: pl(M)[1])
         t_full = bench(f_full, A)
-        emit(f"evd_full_two_stage_n{n}", t_full, "")
+        emit(f"evd_full_two_stage_n{n}", t_full, "",
+             op="eigh", n=n, backend=pl.backend)
+
+        # partial spectrum: top-8 eigenpairs only — the eigenvector phase
+        # (inverse iteration + back-transform) shrinks from n to 8 lanes.
+        pl8 = plan(n, jnp.float32, EvdConfig(b=b, nb=nb, spectrum=by_count(8)))
+        w8, V8 = pl8(A)
+        assert V8.shape == (n, 8)
+        np.testing.assert_allclose(
+            np.asarray(w8), w_ref[-8:], atol=1e-3 * np.abs(w_ref).max()
+        )
+        t_part = bench(lambda M: pl8(M), A)
+        emit(
+            f"evd_top8_two_stage_n{n}", t_part,
+            f"full_evd_us={t_full*1e6:.1f};vec_cols=8_of_{n};"
+            f"speedup_vs_full={t_full/t_part:.2f}",
+            op="eigh_partial", n=n, backend=pl8.backend,
+        )
 
     # batched (the Shampoo regime): many medium matrices at once
-    n, batch = 64, 16
+    n, batch = (32, 8) if is_smoke() else (64, 16)
     As = np.stack([rng.normal(size=(n, n)).astype(np.float32) for _ in range(batch)])
     As = jnp.asarray(As + As.transpose(0, 2, 1))
-    f_b = jax.jit(jax.vmap(lambda M: eigvalsh(M, b=8, nb=32)))
+    pl_b = plan(n, jnp.float32, EvdConfig(b=8, nb=32))
+    f_b = jax.jit(jax.vmap(pl_b.eigvals))
     t_b = bench(f_b, As)
-    emit(f"evd_batched_{batch}x{n}", t_b, f"per_matrix_us={t_b/batch*1e6:.1f}")
+    emit(f"evd_batched_{batch}x{n}", t_b, f"per_matrix_us={t_b/batch*1e6:.1f}",
+         op="eigvalsh_batched", n=n, backend=pl_b.backend)

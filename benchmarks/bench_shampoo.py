@@ -10,21 +10,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import inverse_pth_root
 from repro.optim import adamw, shampoo, ShampooOptions, apply_updates
-from benchmarks.common import bench, emit
+from repro.solver import EvdConfig, plan
+from benchmarks.common import bench, emit, is_smoke
 
 
 def run():
     rng = np.random.default_rng(5)
 
-    # (a) batched inverse roots
-    for n, batch in [(64, 8), (128, 8)]:
+    # (a) batched inverse roots (one cached plan per matrix size)
+    cases = [(32, 4)] if is_smoke() else [(64, 8), (128, 8)]
+    for n, batch in cases:
         G = rng.normal(size=(batch, n, n)).astype(np.float32)
         S = jnp.asarray(np.einsum("bij,bkj->bik", G, G) + 0.1 * np.eye(n, dtype=np.float32))
-        f = jax.jit(jax.vmap(lambda M: inverse_pth_root(M, 4, b=8, nb=32)))
+        pl = plan(n, jnp.float32, EvdConfig(b=8, nb=32))
+        f = jax.jit(jax.vmap(lambda M: pl.inverse_pth_root(M, 4)))
         t = bench(f, S)
-        emit(f"inv4root_batched_{batch}x{n}", t, f"per_matrix_us={t/batch*1e6:.1f}")
+        emit(f"inv4root_batched_{batch}x{n}", t, f"per_matrix_us={t/batch*1e6:.1f}",
+             op="inverse_pth_root", n=n, backend=pl.backend)
 
     # (b) optimizer step comparison on a reduced LM
     from repro.configs import get_smoke_config
@@ -39,9 +42,10 @@ def run():
     for name, opt in [
         ("adamw", adamw(1e-3)),
         ("shampoo_evd", shampoo(1e-3, opts=ShampooOptions(
-            block_size=32, update_interval=1, eigh_b=8, eigh_nb=32))),
+            block_size=32, update_interval=1, evd=EvdConfig(b=8, nb=32)))),
     ]:
         state = opt.init(params)
         step = jax.jit(make_train_step(cfg, opt))
         t = bench(step, params, state, batch, jnp.zeros((), jnp.int32))
-        emit(f"train_step_{name}", t, f"arch={cfg.name};smoke=1")
+        emit(f"train_step_{name}", t, f"arch={cfg.name};smoke=1",
+             op="train_step", n=cfg.d_model)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.backend import registry
-from benchmarks.common import bench, emit
+from benchmarks.common import bench, emit, is_smoke
 
 
 def run():
@@ -27,6 +27,8 @@ def run():
         # Fig-8 style: square-ish growth
         (128, 128), (256, 256), (384, 384),
     ]
+    if is_smoke():
+        shapes = [(128, 32), (128, 128)]
     for n, k in shapes:
         A = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
         B = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
@@ -43,4 +45,5 @@ def run():
             emit(
                 f"syr2k_{backend}_n{n}_k{k}", t,
                 f"gflops={flops/t/1e9:.2f}{extra}",
+                op="syr2k", n=n, backend=backend,
             )

@@ -17,12 +17,13 @@ import numpy as np
 
 from repro.backend import registry
 from repro.core import tridiagonalize
-from benchmarks.common import bench, emit
+from benchmarks.common import bench, emit, is_smoke
 
 
 def run():
     rng = np.random.default_rng(3)
-    for n in (128, 256, 384):
+    sizes = (128,) if is_smoke() else (128, 256, 384)
+    for n in sizes:
         A0 = rng.normal(size=(n, n)).astype(np.float32)
         A = jnp.asarray(A0 + A0.T)
         b = 8
@@ -40,14 +41,17 @@ def run():
                 lambda M, b=b, nb=nb: tridiagonalize(M, b=b, nb=nb)[0]
             )
             t_dbr_ref = bench(f_dbr_ref, A)
-        emit(f"tridiag_direct_n{n}", t_dir, "")
-        emit(f"tridiag_2stage_sbr_n{n}_b{b}", t_sbr, f"speedup_vs_direct={t_dir/t_sbr:.2f}")
+        emit(f"tridiag_direct_n{n}", t_dir, "", op="tridiagonalize", n=n, backend="jnp")
+        emit(f"tridiag_2stage_sbr_n{n}_b{b}", t_sbr, f"speedup_vs_direct={t_dir/t_sbr:.2f}",
+             op="tridiagonalize", n=n, backend=registry.default_backend())
         emit(
             f"tridiag_2stage_dbr_n{n}_b{b}_nb{nb}", t_dbr,
             f"speedup_vs_direct={t_dir/t_dbr:.2f};speedup_vs_sbr={t_sbr/t_dbr:.2f};"
             f"backend={registry.default_backend()}",
+            op="tridiagonalize", n=n, backend=registry.default_backend(),
         )
         emit(
             f"tridiag_2stage_dbr_jnpref_n{n}_b{b}_nb{nb}", t_dbr_ref,
             f"speedup_vs_direct={t_dir/t_dbr_ref:.2f};backend=jnp",
+            op="tridiagonalize", n=n, backend="jnp",
         )

@@ -1,18 +1,34 @@
-"""Benchmark utilities: timing + CSV emission.
+"""Benchmark utilities: timing, CSV emission, machine-readable records.
 
 CPU container caveat (DESIGN.md §9): wall times here are CPU proxies used
 for *relative* algorithmic comparisons (the paper's tables compare
 algorithms on fixed hardware); the TPU roofline story comes from the
 dry-run artifacts in EXPERIMENTS.md.
+
+Every :func:`emit` call both prints the historical
+``name,us_per_call,derived`` CSV row AND appends a structured record
+(op, n, dtype, backend, median_ms) that ``benchmarks.run`` dumps as
+``BENCH_<suite>.json`` — the machine-readable perf trajectory CI collects.
+
+``--smoke`` (or ``REPRO_BENCH_SMOKE=1``) asks suites for their smallest
+problem sizes so a CPU CI step finishes in minutes.
 """
 from __future__ import annotations
 
+import os
 import time
-from typing import Callable
+from typing import Callable, List, Optional
 
 import jax
 
-__all__ = ["bench", "emit"]
+__all__ = ["bench", "emit", "records", "reset_records", "is_smoke"]
+
+_RECORDS: List[dict] = []
+
+
+def is_smoke() -> bool:
+    """True when the reduced-size CI smoke configuration is requested."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
 
 
 def bench(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -31,5 +47,35 @@ def bench(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     return times[len(times) // 2]
 
 
-def emit(name: str, seconds: float, derived: str = ""):
+def emit(
+    name: str,
+    seconds: float,
+    derived: str = "",
+    *,
+    op: Optional[str] = None,
+    n: Optional[int] = None,
+    dtype: str = "float32",
+    backend: Optional[str] = None,
+):
+    """Print the CSV row and record the structured fields for the JSON dump."""
     print(f"{name},{seconds*1e6:.1f},{derived}")
+    _RECORDS.append(
+        {
+            "name": name,
+            "op": op,
+            "n": n,
+            "dtype": dtype,
+            "backend": backend,
+            "median_ms": round(seconds * 1e3, 4),
+            "derived": derived,
+        }
+    )
+
+
+def records() -> List[dict]:
+    """Structured records emitted since the last :func:`reset_records`."""
+    return list(_RECORDS)
+
+
+def reset_records() -> None:
+    _RECORDS.clear()

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.backend.compat import make_mesh
 from repro.core import band_reduce
 from repro.core.distributed import dist_band_reduce, sharded_inverse_roots
+from repro.solver import EvdConfig
 
 
 def main():
@@ -39,7 +40,7 @@ def main():
     batch, m = 16, 64
     G = rng.normal(size=(batch, m, m)).astype(np.float32)
     S = jnp.asarray(np.einsum("bij,bkj->bik", G, G) + 0.1 * np.eye(m, dtype=np.float32))
-    roots = sharded_inverse_roots(mesh, ("x",), S, 4, b=8, nb=32)
+    roots = sharded_inverse_roots(mesh, ("x",), S, 4, config=EvdConfig(b=8, nb=32))
     X0 = np.asarray(roots[0], np.float64)
     chk = np.abs(np.linalg.matrix_power(X0, 4) @ np.asarray(S[0], np.float64) - np.eye(m)).max()
     print(f"[2] sharded Shampoo batch ({batch}x{m}x{m} over 8 devices): "

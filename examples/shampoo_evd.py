@@ -16,6 +16,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.models import model_params
 from repro.optim import adamw, shampoo, ShampooOptions, warmup_cosine
+from repro.solver import EvdConfig
 from repro.train import make_train_step
 from repro.data import DataConfig, synthetic_batch
 
@@ -26,7 +27,9 @@ def run(optimizer_name: str, steps: int = 120):
     if optimizer_name == "shampoo":
         opt = shampoo(
             warmup_cosine(4e-2, warmup=10, total=steps),
-            opts=ShampooOptions(block_size=32, update_interval=10, eigh_b=8, eigh_nb=32),
+            opts=ShampooOptions(
+                block_size=32, update_interval=10, evd=EvdConfig(b=8, nb=32)
+            ),
         )
     else:
         opt = adamw(warmup_cosine(1e-2, warmup=10, total=steps))

@@ -34,8 +34,10 @@ __all__ = [
     "BACKENDS",
     "OPS",
     "default_backend",
+    "effective_default_backend",
     "set_backend",
     "use_backend",
+    "validate_backend",
     "resolve",
     "register",
     "tile_defaults",
@@ -48,26 +50,17 @@ OPS = ("trailing_update", "syr2k", "bulge_chase", "panel_qr")
 _override: Optional[str] = None
 _extra_backends: set = set()
 
-# Per-platform tile-size defaults for the tiled kernels.  TPU tiles follow
-# the paper (256 = 2 MXU lanes per side); interpret-mode platforms use
-# smaller tiles so emulated grids stay cheap on the small problems CPUs run.
-_TILE_DEFAULTS = {
-    "tpu": {
-        "syr2k": dict(bm=256, bk=256),
-        "trailing_update": dict(bm=256, bk=256),
-    },
-    None: {  # any non-TPU platform (interpret mode)
-        "syr2k": dict(bm=128, bk=128),
-        "trailing_update": dict(bm=128, bk=128),
-    },
-}
-
-
 def tile_defaults(op: str, platform: Optional[str] = None) -> dict:
-    """Default tile sizes for ``op`` on ``platform`` (default: the live one)."""
-    plat = probe.platform() if platform is None else platform
-    table = _TILE_DEFAULTS.get(plat, _TILE_DEFAULTS[None])
-    return dict(table.get(op, {}))
+    """Default tile sizes for ``op`` on ``platform`` (default: the live one).
+
+    The authoritative table lives with the rest of the planning-time size
+    decisions in ``repro.solver.autotune``; this delegate keeps the
+    historical registry entry point working.  (Deferred import: the solver
+    package imports ``repro.backend`` at module scope.)
+    """
+    from repro.solver.autotune import tile_defaults as _solver_tiles
+
+    return _solver_tiles(op, platform)
 
 
 def _validate(backend: str) -> str:
@@ -75,6 +68,11 @@ def _validate(backend: str) -> str:
         known = tuple(BACKENDS) + tuple(sorted(_extra_backends))
         raise ValueError(f"unknown kernel backend {backend!r}; expected one of {known}")
     return backend
+
+
+def validate_backend(backend: str) -> str:
+    """Public name-check for backend strings (used by repro.solver.plan)."""
+    return _validate(backend)
 
 
 def default_backend() -> str:
@@ -85,6 +83,19 @@ def default_backend() -> str:
     if env:
         return _validate(env)
     return "pallas" if probe.pallas_available() else "jnp"
+
+
+def effective_default_backend() -> str:
+    """The default backend after graceful degradation: a pallas default on a
+    platform without Pallas falls back to the always-available jnp reference
+    path.  (An EXPLICIT backend request never degrades — parity tests would
+    compare the oracle against itself.)  The one home of this policy, shared
+    by :func:`resolve` and ``repro.solver.plan``.
+    """
+    be = default_backend()
+    if be == "pallas" and not probe.pallas_available():
+        return "jnp"
+    return be
 
 
 def set_backend(backend: Optional[str]) -> None:
@@ -173,9 +184,7 @@ def resolve(op: str, backend: Optional[str] = None) -> Callable:
     if op not in OPS:
         raise KeyError(f"unknown op {op!r}; expected one of {OPS}")
     if backend is None:
-        be = default_backend()
-        if be == "pallas" and not probe.pallas_available():
-            be = "jnp"  # graceful degradation: the reference path always exists
+        be = effective_default_backend()
     else:
         # An explicit backend request must not be silently downgraded —
         # parity tests would compare the oracle against itself.

@@ -1,7 +1,8 @@
 """repro.core — the paper's symmetric EVD pipeline in JAX.
 
 Public surface:
-  tridiagonalize, eigh, eigvalsh, eigh_batched, inverse_pth_root
+  tridiagonalize, eigh, eigvalsh, eigh_batched, eigvalsh_batched,
+  inverse_pth_root (legacy wrappers over the plan API in ``repro.solver``)
   band_reduce (SBR/DBR), band_to_tridiag (bulge chasing), jacobi_eigh
 """
 from .householder import (
@@ -30,6 +31,7 @@ from .jacobi import jacobi_eigh, round_robin_pairs
 from .tridiag_eig import (
     sturm_count,
     eigvalsh_tridiag,
+    eigvalsh_tridiag_range,
     eigvecs_inverse_iteration,
     eigh_tridiag,
 )
@@ -38,6 +40,7 @@ from .eigh import (
     eigh,
     eigvalsh,
     eigh_batched,
+    eigvalsh_batched,
     inverse_pth_root,
 )
 
@@ -71,11 +74,13 @@ __all__ = [
     "round_robin_pairs",
     "sturm_count",
     "eigvalsh_tridiag",
+    "eigvalsh_tridiag_range",
     "eigvecs_inverse_iteration",
     "eigh_tridiag",
     "tridiagonalize",
     "eigh",
     "eigvalsh",
     "eigh_batched",
+    "eigvalsh_batched",
     "inverse_pth_root",
 ]

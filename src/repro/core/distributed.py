@@ -29,6 +29,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.backend import registry
 from repro.backend.compat import shard_map
+from repro.solver import EvdConfig
 
 from .eigh import eigh, inverse_pth_root
 
@@ -164,22 +165,35 @@ def dist_band_reduce(
     return B
 
 
+def _legacy_config(config: Optional[EvdConfig], eigh_kw: dict) -> EvdConfig:
+    # Transitional: accept the historical b=/nb=/method= kwargs and fold
+    # them into a config so all per-device solves go through one plan.
+    if config is not None:
+        if eigh_kw:
+            raise ValueError(f"pass either config= or legacy kwargs, not both: {eigh_kw}")
+        return config
+    return EvdConfig(**eigh_kw) if eigh_kw else EvdConfig()
+
+
 def sharded_eigh_batch(
     mesh: Mesh,
     axes: Sequence[str],
     A_batch: jax.Array,
+    *,
+    config: Optional[EvdConfig] = None,
     **eigh_kw,
 ):
     """eigh over a batch (B, n, n) sharded across the given mesh axes.
 
     Each device runs the full two-stage solver on its local slice of the
     batch (vmap), no collectives — the Shampoo preconditioner pattern.
-    ``B`` must be divisible by the product of the axis sizes.
+    ``B`` must be divisible by the product of the axis sizes.  Solver tuning
+    comes in as one ``config=EvdConfig(...)``.
     """
-    spec = P(tuple(axes))
+    cfg = _legacy_config(config, eigh_kw)
 
     def local(a_blk):
-        return jax.vmap(lambda M: eigh(M, **eigh_kw))(a_blk)
+        return jax.vmap(lambda M: eigh(M, config=cfg))(a_blk)
 
     return shard_map(
         local,
@@ -197,13 +211,15 @@ def sharded_inverse_roots(
     p: int,
     *,
     eps: float = 1e-6,
+    config: Optional[EvdConfig] = None,
     **eigh_kw,
 ):
     """Batched A^{-1/p} sharded across mesh axes (Shampoo's inner loop)."""
+    cfg = _legacy_config(config, eigh_kw)
 
     def local(a_blk):
         return jax.vmap(
-            lambda M: inverse_pth_root(M, p, eps=eps, **eigh_kw)
+            lambda M: inverse_pth_root(M, p, eps=eps, config=cfg)
         )(a_blk)
 
     return shard_map(

@@ -1,159 +1,71 @@
-"""Public EVD API: the paper's full pipeline as one composable entry point.
+"""Legacy-compatible EVD entry points over the plan-based solver API.
 
-    eigh(A)  =  DBR band reduction  ->  wavefront bulge chasing
-             ->  parallel bisection (+ inverse-iteration eigenvectors)
-             ->  back-transform  x_A = Q1 Q2 x_T
+The paper's full pipeline (DBR band reduction -> wavefront bulge chasing ->
+parallel bisection + inverse iteration -> back-transform) now lives behind
+``repro.solver``: a frozen :class:`~repro.solver.EvdConfig` plus a cached
+:class:`~repro.solver.EvdPlan` carry every tuning decision from the user to
+kernel dispatch.  This module keeps the historical kwarg surface —
 
-Methods:
-  * ``two_stage``  — the paper's algorithm (DBR when nb > b, SBR when nb == b)
-  * ``direct``     — one-stage Householder tridiagonalization baseline
-  * ``jacobi``     — dense parallel Jacobi baseline (no tridiagonalization)
+    eigh(A, b=8, nb=64)            ==  plan_for(A, EvdConfig(b=8, nb=64))(A)
+    eigvalsh(A)                    ==  plan.eigvals(A)
+    inverse_pth_root(A, p)         ==  plan.inverse_pth_root(A, p)
 
-The two-stage hot path resolves its kernels (trailing syr2k update, bulge
-chase) through ``repro.backend.registry`` at trace time: Pallas by default,
-``REPRO_KERNEL_BACKEND=jnp`` (or ``repro.backend.use_backend``) forces the
-reference path.
-
-Also provides ``inverse_pth_root`` — the Shampoo-facing consumer of the
-solver — and batched wrappers used by the distributed optimizer.
+— as thin wrappers: each call builds (or re-uses, via the plan cache) the
+equivalent plan and executes it, so legacy callers share jit caches with
+plan-API callers.  New code should prefer ``repro.solver`` directly,
+especially for partial-spectrum requests (``spectrum=by_count(k)``).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.backend import registry
-
-from .band_reduction import band_reduce, apply_q_left
-from .bulge_chasing import band_to_tridiag, apply_q2, extract_tridiag
-from .direct_tridiag import direct_tridiagonalize, apply_q_direct
-from .jacobi import jacobi_eigh
-from .tridiag_eig import eigvalsh_tridiag, eigvecs_inverse_iteration
+from repro.solver import EvdConfig, plan_for
+from repro.solver.plan import tridiagonalize  # noqa: F401  (re-export)
 
 __all__ = [
     "tridiagonalize",
     "eigh",
     "eigvalsh",
     "eigh_batched",
+    "eigvalsh_batched",
     "inverse_pth_root",
 ]
 
-DEFAULT_B = 8
-DEFAULT_NB = 64
 
-
-def _resolve_blocking(n: int, b: Optional[int], nb: Optional[int]):
-    b = DEFAULT_B if b is None else b
-    nb = DEFAULT_NB if nb is None else nb
-    # Clamp to sane values for small matrices; keep n % b == 0 feasible.
-    while b > 1 and n % b != 0:
-        b //= 2
-    b = max(b, 1)
-    nb = max((min(nb, n) // b) * b, b)
-    return b, nb
-
-
-def tridiagonalize(
-    A: jax.Array,
-    *,
-    b: Optional[int] = None,
-    nb: Optional[int] = None,
-    method: str = "two_stage",
-    chase: str = "wavefront",
-    return_reflectors: bool = False,
-):
-    """Symmetric A -> (d, e) tridiagonal, optionally with back-transform data.
-
-    Returns ``(d, e)`` or ``(d, e, backtransform)`` where ``backtransform``
-    applies Q (A = Q T Q^T) to a matrix: ``backtransform(X, transpose)``.
-    """
-    n = A.shape[0]
-    if method == "direct":
-        T, refl = direct_tridiagonalize(A, return_reflectors=True)
-        d, e = extract_tridiag(T)
-        if return_reflectors:
-            return d, e, ("direct", refl)
-        return d, e
-    if method != "two_stage":
-        raise ValueError(f"unknown tridiagonalization method: {method}")
-
-    b_, nb_ = _resolve_blocking(n, b, nb)
-    if b_ <= 1:
-        # Degenerate blocking: fall back to direct reduction.
-        T, refl = direct_tridiagonalize(A, return_reflectors=True)
-        d, e = extract_tridiag(T)
-        if return_reflectors:
-            return d, e, ("direct", refl)
-        return d, e
-
-    if not return_reflectors:
-        # Values-only fast path: no reflector log, so the bulge chase can
-        # dispatch to the VMEM-resident Pallas kernel via the registry.
-        Bband = band_reduce(A, b_, nb_)
-        T = band_to_tridiag(Bband, b_, method=chase)
-        return extract_tridiag(T)
-
-    Bband, refl1 = band_reduce(A, b_, nb_, return_reflectors=True)
-    T, log2 = band_to_tridiag(Bband, b_, method=chase, return_log=True)
-    d, e = extract_tridiag(T)
-    return d, e, ("two_stage", (refl1, log2))
-
-
-def _backtransform(kind_refl, X: jax.Array) -> jax.Array:
-    """x_A = Q x_T where Q is the accumulated tridiagonalization transform."""
-    kind, refl = kind_refl
-    if kind == "direct":
-        return apply_q_direct(refl, X, transpose=False)
-    refl1, log2 = refl
-    X = apply_q2(log2, X, transpose=False)   # Q2 @ X
-    return apply_q_left(refl1, X, transpose=False)  # Q1 @ (Q2 @ X)
-
-
-@partial(
-    jax.jit,
-    static_argnames=(
-        "b", "nb", "method", "chase", "eigenvectors", "max_sweeps", "kernel_backend",
-    ),
-)
-def _eigh_jit(
-    A: jax.Array,
+def _as_config(
+    config: Optional[EvdConfig],
     *,
     b: Optional[int],
     nb: Optional[int],
     method: str,
-    chase: str,
-    eigenvectors: bool,
-    max_sweeps: int,
-    kernel_backend: str,
-):
-    # The backend is part of the jit cache key, so a registry override after
-    # a previous same-shape trace still takes effect; the scoped pin below
-    # makes the trace-time dispatch match the key.
-    with registry.use_backend(kernel_backend):
-        A = 0.5 * (A + A.T)  # enforce symmetry
-        if method == "jacobi":
-            w, V = jacobi_eigh(A, max_sweeps=max_sweeps)
-            return (w, V) if eigenvectors else w
-
-        if not eigenvectors:
-            d, e = tridiagonalize(A, b=b, nb=nb, method=method, chase=chase)
-            return eigvalsh_tridiag(d, e)
-
-        d, e, refl = tridiagonalize(
-            A, b=b, nb=nb, method=method, chase=chase, return_reflectors=True
-        )
-        w = eigvalsh_tridiag(d, e)
-        VT = eigvecs_inverse_iteration(d, e, w)
-        V = _backtransform(refl, VT)
-        return w, V
+    chase: str = "wavefront",
+    max_sweeps: int = 16,
+) -> EvdConfig:
+    if config is not None:
+        overridden = {
+            k: v
+            for k, v, default in (
+                ("b", b, None), ("nb", nb, None), ("method", method, "two_stage"),
+                ("chase", chase, "wavefront"), ("max_sweeps", max_sweeps, 16),
+            )
+            if v != default
+        }
+        if overridden:
+            raise ValueError(
+                f"pass solver options via config=EvdConfig(...), not alongside "
+                f"it: {overridden}"
+            )
+        return config
+    return EvdConfig(method=method, chase=chase, b=b, nb=nb, max_sweeps=max_sweeps)
 
 
 def eigh(
     A: jax.Array,
     *,
+    config: Optional[EvdConfig] = None,
     b: Optional[int] = None,
     nb: Optional[int] = None,
     method: str = "two_stage",
@@ -163,18 +75,13 @@ def eigh(
 ):
     """Full symmetric eigendecomposition.  Eigenvalues ascending.
 
-    Returns ``w`` or ``(w, V)`` with ``A @ V ≈ V @ diag(w)``.
+    Returns ``w`` or ``(w, V)`` with ``A @ V ≈ V @ diag(w)``.  Prefer the
+    plan API (``repro.solver``) for repeated same-shape solves and
+    partial-spectrum selection; this wrapper shares its caches.
     """
-    return _eigh_jit(
-        A,
-        b=b,
-        nb=nb,
-        method=method,
-        chase=chase,
-        eigenvectors=eigenvectors,
-        max_sweeps=max_sweeps,
-        kernel_backend=registry.default_backend(),
-    )
+    cfg = _as_config(config, b=b, nb=nb, method=method, chase=chase,
+                     max_sweeps=max_sweeps)
+    return plan_for(A, cfg)(A, eigenvectors=eigenvectors)
 
 
 def eigvalsh(A: jax.Array, **kw) -> jax.Array:
@@ -182,32 +89,27 @@ def eigvalsh(A: jax.Array, **kw) -> jax.Array:
 
 
 def eigh_batched(A: jax.Array, **kw):
-    """eigh over a batch of matrices (..., n, n) via vmap."""
+    """eigh over a batch of matrices (..., n, n) via vmap.
+
+    Returns ``(w, V)`` — or just ``w`` when called with
+    ``eigenvectors=False`` (see also :func:`eigvalsh_batched`).
+    """
     batch_shape = A.shape[:-2]
     n = A.shape[-1]
     flat = A.reshape((-1, n, n))
-    w, V = jax.vmap(lambda M: eigh(M, **kw))(flat)
-    return w.reshape(batch_shape + (n,)), V.reshape(batch_shape + (n, n))
+    out = jax.vmap(lambda M: eigh(M, **kw))(flat)
+    if kw.get("eigenvectors", True):
+        w, V = out
+        return (
+            w.reshape(batch_shape + w.shape[1:]),
+            V.reshape(batch_shape + V.shape[1:]),
+        )
+    return out.reshape(batch_shape + out.shape[1:])
 
 
-@partial(jax.jit, static_argnames=("p", "method", "b", "nb", "kernel_backend"))
-def _inverse_pth_root_jit(
-    A: jax.Array,
-    p: int,
-    *,
-    eps: float,
-    method: str,
-    b: Optional[int],
-    nb: Optional[int],
-    kernel_backend: str,
-) -> jax.Array:
-    with registry.use_backend(kernel_backend):
-        w, V = eigh(A, method=method, b=b, nb=nb, eigenvectors=True)
-        wmax = jnp.maximum(jnp.max(w), 0.0)
-        ridge = eps * jnp.maximum(wmax, 1e-30)
-        w_safe = jnp.maximum(w, 0.0) + ridge
-        root = jnp.power(w_safe, -1.0 / p)
-        return (V * root[None, :]) @ V.T
+def eigvalsh_batched(A: jax.Array, **kw) -> jax.Array:
+    """Eigenvalues-only batched solve over (..., n, n)."""
+    return eigh_batched(A, eigenvectors=False, **kw)
 
 
 def inverse_pth_root(
@@ -215,6 +117,7 @@ def inverse_pth_root(
     p: int,
     *,
     eps: float = 1e-6,
+    config: Optional[EvdConfig] = None,
     method: str = "two_stage",
     b: Optional[int] = None,
     nb: Optional[int] = None,
@@ -224,7 +127,5 @@ def inverse_pth_root(
     Eigenvalues are ridged by ``eps * max(w)`` before the root, matching
     distributed-Shampoo practice.
     """
-    return _inverse_pth_root_jit(
-        A, p, eps=eps, method=method, b=b, nb=nb,
-        kernel_backend=registry.default_backend(),
-    )
+    cfg = _as_config(config, b=b, nb=nb, method=method)
+    return plan_for(A, cfg).inverse_pth_root(A, p, eps=eps)

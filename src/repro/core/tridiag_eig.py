@@ -14,6 +14,7 @@ All routines are shape-static, jit- and vmap-friendly.
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +23,7 @@ from jax import lax
 __all__ = [
     "sturm_count",
     "eigvalsh_tridiag",
+    "eigvalsh_tridiag_range",
     "eigvecs_inverse_iteration",
     "eigh_tridiag",
 ]
@@ -53,10 +55,9 @@ def sturm_count(d: jax.Array, e: jax.Array, x: jax.Array) -> jax.Array:
     return count
 
 
-@partial(jax.jit, static_argnames=("max_iter",))
-def eigvalsh_tridiag(d: jax.Array, e: jax.Array, max_iter: int = 48) -> jax.Array:
-    """All eigenvalues of tridiag(d, e), ascending, via parallel bisection."""
-    n = d.shape[0]
+def _bisect_indices(d: jax.Array, e: jax.Array, ks: jax.Array, max_iter: int):
+    """Bisection lanes for eigenvalue indices ``ks`` (ascending order)."""
+    m = ks.shape[0]
     e_abs = jnp.concatenate([jnp.zeros((1,), d.dtype), jnp.abs(e)])
     r = e_abs + jnp.concatenate([jnp.abs(e), jnp.zeros((1,), d.dtype)])
     lo0 = jnp.min(d - r)
@@ -65,9 +66,8 @@ def eigvalsh_tridiag(d: jax.Array, e: jax.Array, max_iter: int = 48) -> jax.Arra
     lo0 = lo0 - 0.001 * span
     hi0 = hi0 + 0.001 * span
 
-    ks = jnp.arange(n, dtype=jnp.int32)
-    lo = jnp.full((n,), lo0, d.dtype)
-    hi = jnp.full((n,), hi0, d.dtype)
+    lo = jnp.full((m,), lo0, d.dtype)
+    hi = jnp.full((m,), hi0, d.dtype)
 
     def body(carry, _):
         lo, hi = carry
@@ -80,6 +80,38 @@ def eigvalsh_tridiag(d: jax.Array, e: jax.Array, max_iter: int = 48) -> jax.Arra
 
     (lo, hi), _ = lax.scan(body, (lo, hi), None, length=max_iter)
     return 0.5 * (lo + hi)
+
+
+@partial(jax.jit, static_argnames=("max_iter",))
+def eigvalsh_tridiag(d: jax.Array, e: jax.Array, max_iter: int = 48) -> jax.Array:
+    """All eigenvalues of tridiag(d, e), ascending, via parallel bisection."""
+    n = d.shape[0]
+    return _bisect_indices(d, e, jnp.arange(n, dtype=jnp.int32), max_iter)
+
+
+@partial(jax.jit, static_argnames=("start", "count", "max_iter"))
+def eigvalsh_tridiag_range(
+    d: jax.Array,
+    e: jax.Array,
+    *,
+    start: int = 0,
+    count: Optional[int] = None,
+    max_iter: int = 48,
+) -> jax.Array:
+    """Eigenvalues ``start .. start+count-1`` (ascending index) of
+    tridiag(d, e) — the partial-spectrum entry point (LAPACK ``RANGE='I'``).
+
+    Bisection runs one lane per REQUESTED eigenvalue: a ``count``-sized
+    selection costs ``count`` Sturm lanes regardless of n.
+    """
+    n = d.shape[0]
+    count = n - start if count is None else count
+    if not (0 <= start and start + count <= n and count >= 1):
+        raise ValueError(
+            f"invalid spectrum window [start={start}, count={count}) for n={n}"
+        )
+    ks = start + jnp.arange(count, dtype=jnp.int32)
+    return _bisect_indices(d, e, ks, max_iter)
 
 
 def _tridiag_solve_pivoted(dl: jax.Array, d: jax.Array, du: jax.Array, rhs: jax.Array):
@@ -149,10 +181,12 @@ def eigvecs_inverse_iteration(
 
     One vmapped inverse-iteration lane per eigenvalue; a final thin-QR pass
     re-orthogonalizes clustered vectors (columns arrive eigenvalue-sorted, so
-    Gram–Schmidt only mixes near-degenerate neighbours).  Returns (n, n) with
-    column k the eigenvector for lams[k].
+    Gram–Schmidt only mixes near-degenerate neighbours).  ``lams`` may be any
+    ascending subset of the spectrum (partial-spectrum plans pass k < n
+    values); returns (n, k) with column j the eigenvector for lams[j].
     """
     n = d.shape[0]
+    m = lams.shape[0]
     dtype = d.dtype
     # Deterministic, sign-varied start vector (same for all lanes).
     i = jnp.arange(n, dtype=dtype)
@@ -161,7 +195,7 @@ def eigvecs_inverse_iteration(
     # Tiny eigenvalue perturbation splits exactly-repeated shifts.
     ulp = jnp.finfo(dtype).eps
     scale = jnp.maximum(jnp.max(jnp.abs(lams)), 1.0)
-    lams_p = lams + (jnp.arange(n, dtype=dtype) - n / 2) * (8 * ulp) * scale
+    lams_p = lams + (jnp.arange(m, dtype=dtype) - m / 2) * (8 * ulp) * scale
 
     def one_vec(lam):
         def body(v, _):
@@ -173,7 +207,7 @@ def eigvecs_inverse_iteration(
         v, _ = lax.scan(body, v0, None, length=n_iter)
         return v
 
-    V = jax.vmap(one_vec)(lams_p).T  # (n, n) columns are eigenvectors
+    V = jax.vmap(one_vec)(lams_p).T  # (n, m) columns are eigenvectors
     # QR polish for clusters; fix column signs to keep eigenvector direction.
     Q, R = jnp.linalg.qr(V)
     signs = jnp.sign(jnp.diagonal(R))

@@ -122,9 +122,10 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False, overrides=None,
         optimizer = None
     elif optimizer_name == "shampoo":
         from repro.optim import shampoo, ShampooOptions
+        from repro.solver import EvdConfig
 
         optimizer = shampoo(3e-4, opts=ShampooOptions(
-            block_size=256, update_interval=20, eigh_b=8, eigh_nb=64))
+            block_size=256, update_interval=20, evd=EvdConfig(b=8, nb=64)))
     else:
         optimizer = adamw(3e-4)
     specs = input_specs(arch, shape, optimizer=optimizer, model_axis=model_axis, cfg=cfg)

@@ -7,9 +7,10 @@ exact workload the paper accelerates — computed here by
 ``repro.core.inverse_pth_root`` (DBR band reduction -> wavefront bulge
 chasing -> bisection), batched over ALL parameter blocks at once and
 optionally sharded over the mesh with the compat ``shard_map``
-(``repro.backend.compat``).  The solver's kernels resolve through
-``repro.backend.registry``; ``ShampooOptions.kernel_backend`` pins them
-("pallas" | "jnp") for this optimizer regardless of the process default.
+(``repro.backend.compat``).  All solver tuning flows through ONE field:
+``ShampooOptions.evd`` is a frozen :class:`repro.solver.EvdConfig` (method,
+chase, blocking, kernel-backend pin) handed to the plan-based solver — no
+loose ``eigh_b``/``eigh_nb`` kwargs to re-thread.
 
 Layout: every eligible parameter is cut into (block, block) tiles; all tiles
 across the whole model are stacked into ONE (NB, bs, bs) batch so the solver
@@ -29,8 +30,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from .base import Optimizer, clip_by_global_norm
-from repro.backend import registry
 from repro.core.eigh import inverse_pth_root
+from repro.solver import EvdConfig
 
 __all__ = ["shampoo", "ShampooState", "ShampooOptions"]
 
@@ -45,12 +46,9 @@ class ShampooOptions:
     graft_eps: float = 1e-8
     max_dim_for_shampoo: int = 65536
     vocab_threshold: int = 16384    # leaves with a dim this big use Adam
-    eigh_b: int = 8                 # paper solver blocking
-    eigh_nb: int = 64
-    eigh_method: str = "two_stage"  # two_stage | jacobi
+    evd: EvdConfig = EvdConfig(b=8, nb=64)  # the solver plan config
     batch_pad: int = 512            # pad NB so stats shard on any mesh
     precond_mesh: Any = None        # optional (mesh, axes) to shard the EVD batch
-    kernel_backend: Optional[str] = None  # pin registry backend (pallas|jnp)
 
 
 class ShampooState(NamedTuple):
@@ -164,28 +162,17 @@ def shampoo(
         )
 
     def _roots(stats):
-        def solve(batch):
-            f = lambda M: inverse_pth_root(
-                M, 4, eps=opts.eps, method=opts.eigh_method,
-                b=opts.eigh_b, nb=opts.eigh_nb,
+        # The EvdConfig carries any kernel-backend pin; the plan the solver
+        # builds from it scopes the registry override around its own trace.
+        if opts.precond_mesh is not None:
+            from repro.core.distributed import sharded_inverse_roots
+
+            mesh, axes = opts.precond_mesh
+            return sharded_inverse_roots(
+                mesh, axes, stats, 4, eps=opts.eps, config=opts.evd
             )
-            if opts.precond_mesh is not None:
-                from repro.core.distributed import sharded_inverse_roots
-
-                mesh, axes = opts.precond_mesh
-                return sharded_inverse_roots(
-                    mesh, axes, batch, 4, eps=opts.eps,
-                    method=opts.eigh_method, b=opts.eigh_b, nb=opts.eigh_nb,
-                )
-            return jax.vmap(f)(batch)
-
-        # Kernel dispatch happens at trace time, so pinning the backend here
-        # covers the whole solver trace.  No pin requested -> leave whatever
-        # process-wide override is active untouched.
-        if opts.kernel_backend is None:
-            return solve(stats)
-        with registry.use_backend(opts.kernel_backend):
-            return solve(stats)
+        f = lambda M: inverse_pth_root(M, 4, eps=opts.eps, config=opts.evd)
+        return jax.vmap(f)(stats)
 
     def update(grads, state, params):
         paths, gleaves, treedef = _flatten_with_paths(grads)

@@ -1,0 +1,48 @@
+"""repro.solver — plan-based public API for the symmetric EVD pipeline.
+
+The plan/execute split (cuSOLVER's handle/workspace model, JAX-shaped):
+
+    from repro.solver import EvdConfig, by_count, plan
+
+    cfg = EvdConfig(backend="pallas", spectrum=by_count(8))
+    pl = plan(n, jnp.float32, cfg)     # blocking autotuned + cached
+    w, V = pl(A)                       # jit-cached execution, no retrace
+
+``repro.core.eigh`` / ``eigvalsh`` / ``inverse_pth_root`` remain as thin
+legacy wrappers over this module.
+"""
+from .config import EvdConfig, Spectrum, by_count, by_index, full_spectrum
+from .autotune import (
+    BlockingDecision,
+    blocking_defaults,
+    resolve_blocking,
+    tile_defaults,
+)
+from .plan import (
+    EvdPlan,
+    clear_plan_cache,
+    plan,
+    plan_cache_size,
+    plan_for,
+    trace_count,
+    tridiagonalize,
+)
+
+__all__ = [
+    "EvdConfig",
+    "Spectrum",
+    "by_count",
+    "by_index",
+    "full_spectrum",
+    "BlockingDecision",
+    "blocking_defaults",
+    "resolve_blocking",
+    "tile_defaults",
+    "EvdPlan",
+    "plan",
+    "plan_for",
+    "plan_cache_size",
+    "clear_plan_cache",
+    "trace_count",
+    "tridiagonalize",
+]

@@ -1,0 +1,352 @@
+"""Plan/execute split for the symmetric EVD pipeline.
+
+    cfg = EvdConfig(spectrum=by_count(8))        # how to solve
+    pl  = plan(n, jnp.float32, cfg)              # resolve + cache
+    w, V = pl(A)                                 # execute (jit-cached)
+
+``plan`` resolves everything shape-dependent ONCE — blocking from the
+per-platform autotuning table, the kernel backend, the bisection budget,
+the spectrum index window — into a frozen, hashable :class:`EvdPlan`.
+Plans are cached process-wide: the same (n, dtype, config) always returns
+the SAME object, and execution jits with the plan as a static argument, so
+repeated same-shape calls never retrace (the cuSOLVER handle/workspace
+model, minus the manual workspace bookkeeping).
+
+Partial-spectrum plans (``spectrum=by_index/by_count``) bisect only the
+selected index window and run inverse iteration for only those columns —
+the eigenvector phase scales with k, not n.
+
+``repro.core.eigh`` keeps the legacy kwarg API as thin wrappers over this
+module.  Imports of the pipeline stages are deferred (``_deps``) so that
+``repro.solver`` and ``repro.core`` can import in either order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import Counter
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.backend import probe, registry
+
+from .autotune import resolve_blocking
+from .config import EvdConfig, Spectrum
+
+__all__ = [
+    "EvdPlan",
+    "plan",
+    "plan_for",
+    "clear_plan_cache",
+    "plan_cache_size",
+    "trace_count",
+    "tridiagonalize",
+]
+
+_DEFAULT_BISECT_ITERS = 48
+
+
+class _Deps:
+    """Lazily-bound pipeline stages (breaks the solver <-> core import cycle)."""
+
+    _mod = None
+
+    def __getattr__(self, name):
+        if _Deps._mod is None:
+            from repro.core import band_reduction, bulge_chasing, direct_tridiag
+            from repro.core import jacobi, tridiag_eig
+
+            class _M:
+                band_reduce = staticmethod(band_reduction.band_reduce)
+                apply_q_left = staticmethod(band_reduction.apply_q_left)
+                band_to_tridiag = staticmethod(bulge_chasing.band_to_tridiag)
+                apply_q2 = staticmethod(bulge_chasing.apply_q2)
+                extract_tridiag = staticmethod(bulge_chasing.extract_tridiag)
+                direct_tridiagonalize = staticmethod(direct_tridiag.direct_tridiagonalize)
+                apply_q_direct = staticmethod(direct_tridiag.apply_q_direct)
+                jacobi_eigh = staticmethod(jacobi.jacobi_eigh)
+                eigvalsh_tridiag_range = staticmethod(tridiag_eig.eigvalsh_tridiag_range)
+                eigvecs_inverse_iteration = staticmethod(
+                    tridiag_eig.eigvecs_inverse_iteration
+                )
+
+            _Deps._mod = _M
+        return getattr(_Deps._mod, name)
+
+
+_deps = _Deps()
+
+
+# ------------------------------------------------------------------ pipeline
+def _tridiag_pipeline(A, *, b, nb, method, chase, return_reflectors=False):
+    """Reduce symmetric A to tridiagonal (d, e) via the requested pipeline."""
+    if method == "direct":
+        T, refl = _deps.direct_tridiagonalize(A, return_reflectors=True)
+        d, e = _deps.extract_tridiag(T)
+        if return_reflectors:
+            return d, e, ("direct", refl)
+        return d, e
+
+    if not return_reflectors:
+        # Values-only fast path: no reflector log, so the bulge chase can
+        # dispatch to the VMEM-resident Pallas kernel via the registry.
+        Bband = _deps.band_reduce(A, b, nb)
+        T = _deps.band_to_tridiag(Bband, b, method=chase)
+        return _deps.extract_tridiag(T)
+
+    Bband, refl1 = _deps.band_reduce(A, b, nb, return_reflectors=True)
+    T, log2 = _deps.band_to_tridiag(Bband, b, method=chase, return_log=True)
+    d, e = _deps.extract_tridiag(T)
+    return d, e, ("two_stage", (refl1, log2))
+
+
+def _backtransform(kind_refl, X: jax.Array) -> jax.Array:
+    """x_A = Q x_T where Q is the accumulated tridiagonalization transform."""
+    kind, refl = kind_refl
+    if kind == "direct":
+        return _deps.apply_q_direct(refl, X, transpose=False)
+    refl1, log2 = refl
+    X = _deps.apply_q2(log2, X, transpose=False)        # Q2 @ X
+    return _deps.apply_q_left(refl1, X, transpose=False)  # Q1 @ (Q2 @ X)
+
+
+def tridiagonalize(
+    A: jax.Array,
+    *,
+    b: Optional[int] = None,
+    nb: Optional[int] = None,
+    method: str = "two_stage",
+    chase: str = "wavefront",
+    return_reflectors: bool = False,
+):
+    """Symmetric A -> (d, e) tridiagonal, optionally with back-transform data.
+
+    Legacy-compatible entry point (blocking resolved through the autotune
+    table).  Returns ``(d, e)`` or ``(d, e, backtransform_data)``.
+    """
+    n = A.shape[0]
+    if method == "direct":
+        return _tridiag_pipeline(
+            A, b=1, nb=1, method="direct", chase=chase,
+            return_reflectors=return_reflectors,
+        )
+    if method != "two_stage":
+        raise ValueError(f"unknown tridiagonalization method: {method}")
+    dec = resolve_blocking(n, b=b, nb=nb)
+    eff = "direct" if dec.b <= 1 else "two_stage"
+    return _tridiag_pipeline(
+        A, b=dec.b, nb=dec.nb, method=eff, chase=chase,
+        return_reflectors=return_reflectors,
+    )
+
+
+# ------------------------------------------------------------------ the plan
+@dataclasses.dataclass(frozen=True)
+class EvdPlan:
+    """A fully-resolved, cached, executable EVD solver for one (n, dtype).
+
+    Hashable and frozen: the plan itself is the jit static argument, so one
+    plan == one trace.  Call it: ``w, V = plan(A)``; ``w = plan.eigvals(A)``;
+    ``X = plan.inverse_pth_root(A, p)``.
+    """
+
+    n: int
+    dtype: str                       # canonical dtype name ("float32", ...)
+    config: EvdConfig
+    b: int                           # resolved bandwidth (0: not applicable)
+    nb: int                          # resolved update block
+    bisect_iters: int
+    backend: str                     # resolved kernel backend
+    platform: str
+    fallback_reason: Optional[str] = None
+
+    # ---- derived views ----------------------------------------------------
+    @property
+    def method(self) -> str:
+        """Effective method (``direct`` when blocking degenerated)."""
+        if self.config.method == "two_stage" and self.b <= 1:
+            return "direct"
+        return self.config.method
+
+    @property
+    def spectrum_range(self) -> Tuple[int, int]:
+        """(start, count) into the ascending spectrum."""
+        return self.config.spectrum.index_range(self.n)
+
+    @property
+    def k(self) -> int:
+        """Number of eigenpairs this plan computes."""
+        return self.spectrum_range[1]
+
+    # ---- execution --------------------------------------------------------
+    def _check_operand(self, A: jax.Array) -> None:
+        if A.shape[-2:] != (self.n, self.n):
+            raise ValueError(
+                f"plan built for n={self.n}, got operand shape {A.shape}; "
+                f"use plan_for(A, config) to plan from the array"
+            )
+        got = jnp.dtype(A.dtype).name
+        if got != self.dtype:
+            raise ValueError(f"plan built for dtype {self.dtype}, got {got}")
+
+    def __call__(self, A: jax.Array, *, eigenvectors: bool = True):
+        """Execute: returns ``(w, V)`` or ``w``; ``w`` ascending, shape (k,),
+        ``V`` shape (n, k) with ``A @ V ≈ V @ diag(w)``."""
+        self._check_operand(A)
+        return _execute(A, pl=self, eigenvectors=eigenvectors)
+
+    def eigvals(self, A: jax.Array) -> jax.Array:
+        self._check_operand(A)
+        return _execute(A, pl=self, eigenvectors=False)
+
+    def inverse_pth_root(self, A: jax.Array, p: int, *, eps: float = 1e-6):
+        """A^{-1/p} for symmetric PSD A (the Shampoo preconditioner kernel)."""
+        if not self.config.spectrum.is_full:
+            raise ValueError(
+                "inverse_pth_root needs the full spectrum; this plan selects "
+                f"{self.config.spectrum}"
+            )
+        self._check_operand(A)
+        return _inverse_pth_root(A, jnp.asarray(eps, jnp.float32), pl=self, p=p)
+
+    def describe(self) -> str:
+        parts = [
+            f"EvdPlan(n={self.n}, {self.dtype}, method={self.method}, "
+            f"b={self.b}, nb={self.nb}, backend={self.backend}, "
+            f"platform={self.platform}, k={self.k}/{self.n})"
+        ]
+        if self.fallback_reason:
+            parts.append(f"  fallback: {self.fallback_reason}")
+        return "\n".join(parts)
+
+
+# ------------------------------------------------------------------ planning
+_PLAN_CACHE: Dict[tuple, EvdPlan] = {}
+
+
+def _bisect_iters(tol: Optional[float]) -> int:
+    if tol is None:
+        return _DEFAULT_BISECT_ITERS
+    # Bisection halves the bracket each iteration; tol is relative to the
+    # initial Gershgorin span.
+    return max(8, min(64, int(math.ceil(math.log2(1.0 / tol))) + 1))
+
+
+def plan(n: int, dtype, config: EvdConfig = EvdConfig()) -> EvdPlan:
+    """Resolve ``config`` for an (n, n) ``dtype`` problem.  Cached: repeated
+    calls with equal arguments return the identical :class:`EvdPlan` object.
+    """
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    dtype_name = jnp.dtype(dtype).name
+    platform = probe.platform()
+    if config.backend is None:
+        backend = registry.effective_default_backend()
+    else:
+        backend = registry.validate_backend(config.backend)
+
+    key = (n, dtype_name, config, backend, platform)
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        return cached
+
+    config.spectrum.index_range(n)  # validate the selection against n early
+    if config.method == "two_stage":
+        dec = resolve_blocking(n, b=config.b, nb=config.nb, platform=platform)
+        b, nb, reason = dec.b, dec.nb, dec.fallback_reason
+    else:
+        b, nb, reason = 0, 0, None
+
+    pl = EvdPlan(
+        n=n,
+        dtype=dtype_name,
+        config=config,
+        b=b,
+        nb=nb,
+        bisect_iters=_bisect_iters(config.tol),
+        backend=backend,
+        platform=platform,
+        fallback_reason=reason,
+    )
+    _PLAN_CACHE[key] = pl
+    return pl
+
+
+def plan_for(A: jax.Array, config: EvdConfig = EvdConfig()) -> EvdPlan:
+    """Plan from an array's trailing (n, n) shape and dtype (vmap-safe)."""
+    if A.ndim < 2 or A.shape[-1] != A.shape[-2]:
+        raise ValueError(f"expected a square trailing shape, got {A.shape}")
+    return plan(A.shape[-1], A.dtype, config)
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+
+
+def plan_cache_size() -> int:
+    return len(_PLAN_CACHE)
+
+
+# ------------------------------------------------------------------ execution
+# Python-side trace counter: the jitted bodies below only run while tracing,
+# so incrementing here counts traces, not executions (tests rely on this to
+# prove the no-retrace property).
+_TRACE_COUNTS: Counter = Counter()
+
+
+def trace_count(pl: Optional[EvdPlan] = None) -> int:
+    """Traces recorded for ``pl`` (or all plans when None)."""
+    if pl is None:
+        return sum(_TRACE_COUNTS.values())
+    return sum(v for (p, _), v in _TRACE_COUNTS.items() if p == pl)
+
+
+@partial(jax.jit, static_argnames=("pl", "eigenvectors"))
+def _execute(A: jax.Array, *, pl: EvdPlan, eigenvectors: bool):
+    _TRACE_COUNTS[(pl, eigenvectors)] += 1
+    start, count = pl.spectrum_range
+    # The backend is baked into the plan (and thus the jit cache key); the
+    # scoped pin makes trace-time registry dispatch match it.
+    with registry.use_backend(pl.backend):
+        A = 0.5 * (A + A.T)  # enforce symmetry
+        if pl.method == "jacobi":
+            w, V = _deps.jacobi_eigh(A, max_sweeps=pl.config.max_sweeps)
+            w = w[start : start + count]
+            if not eigenvectors:
+                return w
+            return w, V[:, start : start + count]
+
+        if not eigenvectors:
+            d, e = _tridiag_pipeline(
+                A, b=pl.b, nb=pl.nb, method=pl.method, chase=pl.config.chase
+            )
+            return _deps.eigvalsh_tridiag_range(
+                d, e, start=start, count=count, max_iter=pl.bisect_iters
+            )
+
+        d, e, refl = _tridiag_pipeline(
+            A, b=pl.b, nb=pl.nb, method=pl.method, chase=pl.config.chase,
+            return_reflectors=True,
+        )
+        w = _deps.eigvalsh_tridiag_range(
+            d, e, start=start, count=count, max_iter=pl.bisect_iters
+        )
+        # Partial spectrum: inverse iteration runs ONE lane per selected
+        # eigenvalue — the eigenvector phase costs O(k), not O(n).
+        VT = _deps.eigvecs_inverse_iteration(d, e, w)
+        V = _backtransform(refl, VT)
+        return w, V
+
+
+@partial(jax.jit, static_argnames=("pl", "p"))
+def _inverse_pth_root(A: jax.Array, eps: jax.Array, *, pl: EvdPlan, p: int):
+    _TRACE_COUNTS[(pl, f"inv{p}")] += 1
+    w, V = _execute(A, pl=pl, eigenvectors=True)
+    wmax = jnp.maximum(jnp.max(w), 0.0)
+    ridge = eps * jnp.maximum(wmax, 1e-30)
+    w_safe = jnp.maximum(w, 0.0) + ridge
+    root = jnp.power(w_safe, -1.0 / p)
+    return (V * root[None, :]) @ V.T

@@ -10,10 +10,12 @@ given, settings, st = hypothesis_or_stub()
 
 from repro.core import (
     eigvalsh_tridiag,
+    eigvalsh_tridiag_range,
     eigvecs_inverse_iteration,
     eigh,
     eigvalsh,
     eigh_batched,
+    eigvalsh_batched,
     inverse_pth_root,
     jacobi_eigh,
     sturm_count,
@@ -30,6 +32,19 @@ def test_bisection_matches_scipy(rng, n):
     w_ref = sla.eigvalsh_tridiagonal(d.astype(np.float64), e.astype(np.float64))
     scale = max(np.abs(w_ref).max(), 1.0)
     np.testing.assert_allclose(np.sort(w), np.sort(w_ref), atol=5e-5 * scale)
+
+
+@pytest.mark.parametrize("start,count", [(0, 4), (7, 9), (28, 5)])
+def test_bisection_range_matches_full(rng, start, count):
+    n = 33
+    d = rng.normal(size=n).astype(np.float32)
+    e = rng.normal(size=n - 1).astype(np.float32)
+    w_full = np.asarray(eigvalsh_tridiag(jnp.asarray(d), jnp.asarray(e)))
+    w_part = np.asarray(
+        eigvalsh_tridiag_range(jnp.asarray(d), jnp.asarray(e), start=start, count=count)
+    )
+    scale = max(np.abs(w_full).max(), 1.0)
+    np.testing.assert_allclose(w_part, w_full[start : start + count], atol=1e-5 * scale)
 
 
 def test_sturm_count_monotone(rng):
@@ -103,6 +118,27 @@ def test_eigh_batched(rng):
         np.testing.assert_allclose(
             np.sort(np.asarray(w[i])), w_ref, atol=3e-4 * np.abs(w_ref).max()
         )
+
+
+def test_eigh_batched_values_only(rng):
+    """Regression: eigenvectors=False used to crash unpacking (w, V)."""
+    A = np.stack([random_symmetric(rng, 16) for _ in range(3)])
+    w = eigh_batched(jnp.asarray(A), b=4, nb=8, eigenvectors=False)
+    assert w.shape == (3, 16)
+    w2 = eigvalsh_batched(jnp.asarray(A), b=4, nb=8)
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(w2))
+    for i in range(3):
+        w_ref = np.sort(sla.eigvalsh(A[i].astype(np.float64)))
+        np.testing.assert_allclose(
+            np.sort(np.asarray(w[i])), w_ref, atol=3e-4 * np.abs(w_ref).max()
+        )
+
+
+def test_eigvalsh_batched_nd_batch(rng):
+    """(..., n, n) leading batch dims survive the round trip."""
+    A = np.stack([random_symmetric(rng, 8) for _ in range(6)]).reshape(2, 3, 8, 8)
+    w = eigvalsh_batched(jnp.asarray(A), b=4, nb=4)
+    assert w.shape == (2, 3, 8)
 
 
 def test_eigh_vmap_jit(rng):

@@ -32,6 +32,7 @@ def test_distributed_band_reduce_and_roots():
         import numpy as np, jax, jax.numpy as jnp
         from repro.core.distributed import dist_band_reduce, sharded_inverse_roots
         from repro.core import band_reduce
+        from repro.solver import EvdConfig
         from repro.backend.compat import make_mesh
         mesh = make_mesh((8,), ("x",))
         rng = np.random.default_rng(3)
@@ -43,7 +44,7 @@ def test_distributed_band_reduce_and_roots():
         assert err < 1e-4 * float(jnp.abs(B2).max()), err
         G = rng.normal(size=(16, 16, 16)).astype(np.float32)
         S = jnp.asarray(np.einsum('bij,bkj->bik', G, G) + 0.1*np.eye(16, dtype=np.float32))
-        R = sharded_inverse_roots(mesh, ("x",), S, 4, b=4, nb=8)
+        R = sharded_inverse_roots(mesh, ("x",), S, 4, config=EvdConfig(b=4, nb=8))
         R0 = np.asarray(R[0], np.float64); S0 = np.asarray(S[0], np.float64)
         err2 = np.abs(np.linalg.matrix_power(R0,4)@S0 - np.eye(16)).max()
         assert err2 < 0.05, err2

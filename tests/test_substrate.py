@@ -19,6 +19,7 @@ from repro.optim import (
 )
 from repro.data import DataConfig, synthetic_batch, batch_for
 from repro.ckpt import CheckpointManager
+from repro.solver import EvdConfig
 
 
 # ------------------------------------------------------------- optimizers
@@ -40,7 +41,7 @@ def _quadratic(rng=None, n=24):
     "make_opt",
     [
         lambda: adamw(1e-2),
-        lambda: shampoo(0.2, opts=ShampooOptions(block_size=8, update_interval=5, eigh_b=4, eigh_nb=8)),
+        lambda: shampoo(0.2, opts=ShampooOptions(block_size=8, update_interval=5, evd=EvdConfig(b=4, nb=8))),
     ],
     ids=["adamw", "shampoo"],
 )
@@ -78,7 +79,7 @@ def test_shampoo_uses_paper_evd(rng, monkeypatch):
 
     monkeypatch.setattr(sh, "inverse_pth_root", spy)
     loss_fn, params = _quadratic(rng, n=16)
-    opt = sh.shampoo(0.1, opts=ShampooOptions(block_size=8, update_interval=2, eigh_b=4, eigh_nb=8))
+    opt = sh.shampoo(0.1, opts=ShampooOptions(block_size=8, update_interval=2, evd=EvdConfig(b=4, nb=8)))
     state = opt.init(params)
     g = jax.grad(loss_fn)(params)
     opt.update(g, state, params)  # traced -> spy called during trace
