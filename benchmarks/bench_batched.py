@@ -1,0 +1,101 @@
+"""Batched solve front door: solve_many throughput, homogeneous vs bucketed.
+
+Two suites:
+
+* **homogeneous** — one (B, n, n) stack through ``solve_many`` vs the same
+  work as a per-matrix plan loop: the batching win (one executable, one
+  dispatch, no per-matrix Python overhead) on the paper's "many medium
+  matrices" regime.
+* **bucketed-heterogeneous** — a ragged mix of sizes through shape buckets
+  (exact buckets, then PadPolicy ``bucket_sizes`` padding): what EVD-serving
+  traffic and mixed-size Shampoo blocks look like, vs the per-matrix loop
+  that was the only option before ``solve_many``.
+
+Also times the batched ``inverse_pth_root`` op (Shampoo's refresh call).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.solver import EvdConfig, PadPolicy, plan, solve_many
+from benchmarks.common import bench, emit, is_smoke
+
+
+def _sym(rng, n):
+    a = rng.normal(size=(n, n)).astype(np.float32)
+    return jnp.asarray(a + a.T)
+
+
+def run():
+    rng = np.random.default_rng(6)
+    cfg = EvdConfig(b=8, nb=32)
+
+    # ---- homogeneous: one stacked bucket --------------------------------
+    n, batch = (32, 8) if is_smoke() else (64, 32)
+    As = jnp.stack([_sym(rng, n) for _ in range(batch)])
+    backend = plan(n, jnp.float32, cfg).backend
+
+    f_many = lambda X: solve_many(X, cfg, eigenvectors=False)
+    t_many = bench(f_many, As)
+    emit(
+        f"solve_many_homog_{batch}x{n}", t_many,
+        f"per_matrix_us={t_many/batch*1e6:.1f}",
+        op="solve_many", n=n, backend=backend,
+    )
+
+    pl = plan(n, jnp.float32, cfg)
+    f_loop = lambda X: [pl.eigvals(M) for M in X]
+    t_loop = bench(f_loop, As)
+    emit(
+        f"plan_loop_homog_{batch}x{n}", t_loop,
+        f"per_matrix_us={t_loop/batch*1e6:.1f};batched_speedup={t_loop/t_many:.2f}",
+        op="eigvalsh", n=n, backend=backend,
+    )
+
+    # ---- heterogeneous: exact buckets vs PadPolicy bucketing ------------
+    if is_smoke():
+        sizes, reps = (16, 24, 32), 2
+    else:
+        sizes, reps = (48, 56, 64, 80, 96), 4
+    mats = [_sym(rng, n_i) for n_i in sizes for _ in range(reps)]
+    nmax = max(sizes)
+
+    f_exact = lambda ms: solve_many(ms, cfg, eigenvectors=False)
+    t_exact = bench(f_exact, mats)
+    emit(
+        f"solve_many_het_exact_{len(mats)}mats", t_exact,
+        f"sizes={'/'.join(map(str, sizes))};buckets={len(sizes)}",
+        op="solve_many", n=nmax, backend=backend,
+    )
+
+    pol = PadPolicy(bucket_sizes=(nmax,))
+    f_pad = lambda ms: solve_many(ms, cfg, eigenvectors=False, pad=pol)
+    t_pad = bench(f_pad, mats)
+    emit(
+        f"solve_many_het_bucketed_{len(mats)}mats", t_pad,
+        f"pad_to={nmax};buckets=1;vs_exact={t_exact/t_pad:.2f}",
+        op="solve_many", n=nmax, backend=backend,
+    )
+
+    f_hloop = lambda ms: [plan(M.shape[0], jnp.float32, cfg).eigvals(M) for M in ms]
+    t_hloop = bench(f_hloop, mats)
+    emit(
+        f"plan_loop_het_{len(mats)}mats", t_hloop,
+        f"bucketed_speedup={t_hloop/t_pad:.2f};exact_speedup={t_hloop/t_exact:.2f}",
+        op="eigvalsh", n=nmax, backend=backend,
+    )
+
+    # ---- Shampoo's refresh: batched inverse 4th roots -------------------
+    n_s, b_s = (16, 8) if is_smoke() else (32, 16)
+    G = rng.normal(size=(b_s, n_s, n_s)).astype(np.float32)
+    S = jnp.asarray(
+        np.einsum("bij,bkj->bik", G, G) + 0.1 * np.eye(n_s, dtype=np.float32)
+    )
+    f_roots = lambda X: solve_many(X, cfg, op="inverse_pth_root", p=4)
+    t_roots = bench(f_roots, S)
+    emit(
+        f"solve_many_inv4root_{b_s}x{n_s}", t_roots,
+        f"per_matrix_us={t_roots/b_s*1e6:.1f}",
+        op="inverse_pth_root", n=n_s, backend=backend,
+    )

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import jacobi_eigh
-from repro.solver import EvdConfig, by_count, plan
+from repro.solver import EvdConfig, by_count, plan, solve_many
 from benchmarks.common import bench, emit, is_smoke
 
 
@@ -67,12 +67,14 @@ def run():
             op="eigh_partial", n=n, backend=pl8.backend,
         )
 
-    # batched (the Shampoo regime): many medium matrices at once
+    # batched (the Shampoo regime): many medium matrices through the
+    # solve_many front door — one cached BatchPlan, one executable.
     n, batch = (32, 8) if is_smoke() else (64, 16)
     As = np.stack([rng.normal(size=(n, n)).astype(np.float32) for _ in range(batch)])
     As = jnp.asarray(As + As.transpose(0, 2, 1))
-    pl_b = plan(n, jnp.float32, EvdConfig(b=8, nb=32))
-    f_b = jax.jit(jax.vmap(pl_b.eigvals))
+    cfg_b = EvdConfig(b=8, nb=32)
+    f_b = lambda X: solve_many(X, cfg_b, eigenvectors=False)
     t_b = bench(f_b, As)
     emit(f"evd_batched_{batch}x{n}", t_b, f"per_matrix_us={t_b/batch*1e6:.1f}",
-         op="eigvalsh_batched", n=n, backend=pl_b.backend)
+         op="eigvalsh_batched", n=n,
+         backend=plan(n, jnp.float32, cfg_b).backend)

@@ -10,24 +10,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backend import registry
 from repro.optim import adamw, shampoo, ShampooOptions, apply_updates
-from repro.solver import EvdConfig, plan
+from repro.solver import EvdConfig, plan, solve_many
 from benchmarks.common import bench, emit, is_smoke
 
 
 def run():
     rng = np.random.default_rng(5)
 
-    # (a) batched inverse roots (one cached plan per matrix size)
+    # (a) batched inverse roots — the exact solve_many call Shampoo's
+    # refresh issues (one cached BatchPlan per matrix size)
     cases = [(32, 4)] if is_smoke() else [(64, 8), (128, 8)]
     for n, batch in cases:
         G = rng.normal(size=(batch, n, n)).astype(np.float32)
         S = jnp.asarray(np.einsum("bij,bkj->bik", G, G) + 0.1 * np.eye(n, dtype=np.float32))
-        pl = plan(n, jnp.float32, EvdConfig(b=8, nb=32))
-        f = jax.jit(jax.vmap(lambda M: pl.inverse_pth_root(M, 4)))
+        cfg = EvdConfig(b=8, nb=32)
+        f = lambda X: solve_many(X, cfg, op="inverse_pth_root", p=4)
         t = bench(f, S)
         emit(f"inv4root_batched_{batch}x{n}", t, f"per_matrix_us={t/batch*1e6:.1f}",
-             op="inverse_pth_root", n=n, backend=pl.backend)
+             op="inverse_pth_root", n=n,
+             backend=plan(n, jnp.float32, cfg).backend)
 
     # (b) optimizer step comparison on a reduced LM
     from repro.configs import get_smoke_config
@@ -48,4 +51,5 @@ def run():
         step = jax.jit(make_train_step(cfg, opt))
         t = bench(step, params, state, batch, jnp.zeros((), jnp.int32))
         emit(f"train_step_{name}", t, f"arch={cfg.name};smoke=1",
-             op="train_step", n=cfg.d_model)
+             op="train_step", n=cfg.d_model,
+             backend=registry.effective_default_backend())

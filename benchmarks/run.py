@@ -11,6 +11,7 @@ Paper-artifact mapping (DESIGN.md §8):
     bulge   -> Figure 9
     tridiag -> Figure 10
     evd     -> Figure 11
+    batched -> beyond-paper (solve_many front door: the many-matrices regime)
     shampoo -> beyond-paper (production consumer)
 
 Each suite also writes ``<json-dir>/BENCH_<suite>.json``: a list of
@@ -49,6 +50,7 @@ def main() -> None:
         bench_bulge,
         bench_tridiag,
         bench_evd,
+        bench_batched,
         bench_shampoo,
     )
     from benchmarks import common
@@ -60,6 +62,7 @@ def main() -> None:
         "bulge": bench_bulge.run,
         "tridiag": bench_tridiag.run,
         "evd": bench_evd.run,
+        "batched": bench_batched.run,
         "shampoo": bench_shampoo.run,
     }
     selected = args.only.split(",") if args.only else list(suites)

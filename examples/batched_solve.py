@@ -1,0 +1,72 @@
+"""solve_many walkthrough: shape buckets, PadPolicy, one compile per bucket.
+
+    PYTHONPATH=src python examples/batched_solve.py
+
+Simulates EVD-serving traffic: requests arrive with heterogeneous matrix
+sizes, and the batched front door turns them into a handful of bucketed,
+jit-cached stacked solves instead of a per-matrix Python loop.
+"""
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.solver import (
+    EvdConfig,
+    PadPolicy,
+    batch_plan,
+    plan,
+    solve_many,
+    trace_count,
+)
+
+
+def sym(rng, n):
+    a = rng.normal(size=(n, n)).astype(np.float32)
+    return jnp.asarray(a + a.T)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    cfg = EvdConfig()
+
+    # A ragged "request batch": three sizes, several requests each.
+    sizes = [64, 96, 64, 128, 96, 64, 128, 96]
+    mats = [sym(rng, n) for n in sizes]
+
+    # ---- exact buckets: bit-identical to the per-matrix loop ------------
+    t0 = time.perf_counter()
+    results = solve_many(mats, cfg)
+    t_many = time.perf_counter() - t0
+    for n in sorted(set(sizes)):
+        bpl = batch_plan(n, sizes.count(n), jnp.float32, cfg)
+        print(f"bucket n={n}: batch={bpl.batch}, traces={trace_count(bpl)}")
+
+    t0 = time.perf_counter()
+    loop = [plan(M.shape[0], jnp.float32, cfg)(M) for M in mats]
+    t_loop = time.perf_counter() - t0
+    bitwise = all(
+        bool(jnp.array_equal(w, w2)) and bool(jnp.array_equal(V, V2))
+        for (w, V), (w2, V2) in zip(results, loop)
+    )
+    print(f"exact buckets: {len(mats)} mats in {t_many*1e3:.1f} ms "
+          f"(loop {t_loop*1e3:.1f} ms), bit-identical={bitwise}")
+
+    # ---- declared buckets: 3 sizes share 1 executable -------------------
+    pol = PadPolicy(bucket_sizes=(128,), batch_multiple=8)
+    padded = solve_many(mats, cfg, pad=pol)
+    errs = [
+        float(jnp.abs(wp - w).max() / jnp.abs(w).max())
+        for (wp, _), (w, _) in zip(padded, results)
+    ]
+    print(f"one padded bucket (pad_to=128): max eigenvalue rel-err "
+          f"{max(errs):.2e} (ridge-identity fill, approximate by design)")
+
+    # ---- second wave of traffic: zero retraces --------------------------
+    before = trace_count()
+    solve_many([sym(rng, n) for n in sizes], cfg)
+    print(f"second wave retraces: {trace_count() - before} (plan cache hit)")
+
+
+if __name__ == "__main__":
+    main()

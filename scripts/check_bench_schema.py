@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Fail CI when any emitted BENCH_<suite>.json record is schema-incomplete.
+
+    python scripts/check_bench_schema.py bench-artifacts [more dirs/files...]
+
+Every record in every ``BENCH_*.json`` must carry non-empty ``op``, ``n``,
+``dtype``, ``backend``, and ``median_ms`` fields — the machine-readable
+perf-trajectory contract the CI artifact collectors rely on.  A suite that
+emits a row without them (``emit(..., op=None)``) silently drops out of
+the trajectory; this gate turns that into a red build instead.
+
+Exit status: 0 when every record passes, 1 with a per-record report when
+any field is missing/empty, 2 when no BENCH files were found at all (a
+renamed artifact dir must not green-wash the gate).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+REQUIRED = ("op", "n", "dtype", "backend", "median_ms")
+
+
+def bench_files(paths):
+    files = []
+    for path in paths:
+        if os.path.isdir(path):
+            files.extend(sorted(glob.glob(os.path.join(path, "BENCH_*.json"))))
+        elif os.path.isfile(path):
+            files.append(path)
+        else:
+            files.extend(sorted(glob.glob(path)))
+    return files
+
+
+def check_file(path):
+    """-> (problems, record_count) for one BENCH json (dict or bare list)."""
+    with open(path) as f:
+        payload = json.load(f)
+    records = payload if isinstance(payload, list) else payload.get("records", [])
+    problems = []
+    if not records:
+        problems.append(f"{path}: no records at all")
+    for i, rec in enumerate(records):
+        missing = [k for k in REQUIRED if rec.get(k) in (None, "")]
+        if missing:
+            name = rec.get("name", f"record[{i}]")
+            problems.append(f"{path}: {name} missing {','.join(missing)}")
+    return problems, len(records)
+
+
+def main(argv) -> int:
+    paths = argv or ["experiments/bench"]
+    files = bench_files(paths)
+    if not files:
+        print(f"check_bench_schema: no BENCH_*.json found under {paths}", file=sys.stderr)
+        return 2
+    problems = []
+    total = 0
+    for path in files:
+        file_problems, count = check_file(path)
+        problems.extend(file_problems)
+        total += count
+    if problems:
+        print(f"check_bench_schema: {len(problems)} problem(s) in {len(files)} file(s):")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(
+        f"check_bench_schema: OK — {total} records across {len(files)} file(s), "
+        f"all carry {'/'.join(REQUIRED)}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

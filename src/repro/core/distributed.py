@@ -14,13 +14,14 @@ The paper targets a single accelerator; its future-work section calls out
 
 2. **Many medium matrices** (the Shampoo regime): a batch of (n, n)
    preconditioner blocks sharded over the flattened mesh; each device runs
-   the full two-stage solver locally via vmap.  ``sharded_eigh_batch`` /
-   ``sharded_inverse_roots`` implement this; it is how `repro.optim.shampoo`
-   consumes the solver.
+   the full two-stage solver locally.  This regime now lives behind
+   ``repro.solver.solve_many(..., devices=(mesh, axes))`` — the one front
+   door for every multi-matrix consumer — and ``sharded_eigh_batch`` /
+   ``sharded_inverse_roots`` here are thin deprecated shims over it.
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -29,9 +30,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.backend import registry
 from repro.backend.compat import shard_map
-from repro.solver import EvdConfig
-
-from .eigh import eigh, inverse_pth_root
+from repro.solver import EvdConfig, solve_many
 
 __all__ = [
     "dist_trailing_update",
@@ -175,6 +174,15 @@ def _legacy_config(config: Optional[EvdConfig], eigh_kw: dict) -> EvdConfig:
     return EvdConfig(**eigh_kw) if eigh_kw else EvdConfig()
 
 
+def _deprecated(old: str) -> None:
+    warnings.warn(
+        f"repro.core.distributed.{old} is a deprecated shim; call "
+        f"repro.solver.solve_many(..., devices=(mesh, axes)) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def sharded_eigh_batch(
     mesh: Mesh,
     axes: Sequence[str],
@@ -183,25 +191,17 @@ def sharded_eigh_batch(
     config: Optional[EvdConfig] = None,
     **eigh_kw,
 ):
-    """eigh over a batch (B, n, n) sharded across the given mesh axes.
+    """Deprecated shim over :func:`repro.solver.solve_many`.
 
-    Each device runs the full two-stage solver on its local slice of the
-    batch (vmap), no collectives — the Shampoo preconditioner pattern.
-    ``B`` must be divisible by the product of the axis sizes.  Solver tuning
-    comes in as one ``config=EvdConfig(...)``.
+    eigh over a batch (B, n, n) sharded across the given mesh axes: each
+    device runs the full two-stage solver on its local slice of the batch,
+    no collectives — the Shampoo preconditioner pattern.  ``solve_many``
+    pads B up to the mesh size with identity lanes, so divisibility is no
+    longer a caller concern.
     """
+    _deprecated("sharded_eigh_batch")
     cfg = _legacy_config(config, eigh_kw)
-
-    def local(a_blk):
-        return jax.vmap(lambda M: eigh(M, config=cfg))(a_blk)
-
-    return shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(tuple(axes), None, None),),
-        out_specs=(P(tuple(axes)), P(tuple(axes), None, None)),
-        check_vma=False,
-    )(A_batch)
+    return solve_many(A_batch, cfg, devices=(mesh, tuple(axes)))
 
 
 def sharded_inverse_roots(
@@ -214,18 +214,11 @@ def sharded_inverse_roots(
     config: Optional[EvdConfig] = None,
     **eigh_kw,
 ):
-    """Batched A^{-1/p} sharded across mesh axes (Shampoo's inner loop)."""
+    """Deprecated shim: batched A^{-1/p} sharded across mesh axes — now
+    ``solve_many(A, cfg, op="inverse_pth_root", devices=(mesh, axes))``."""
+    _deprecated("sharded_inverse_roots")
     cfg = _legacy_config(config, eigh_kw)
-
-    def local(a_blk):
-        return jax.vmap(
-            lambda M: inverse_pth_root(M, p, eps=eps, config=cfg)
-        )(a_blk)
-
-    return shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(tuple(axes), None, None),),
-        out_specs=P(tuple(axes), None, None),
-        check_vma=False,
-    )(A_batch)
+    return solve_many(
+        A_batch, cfg, op="inverse_pth_root", p=p, eps=eps,
+        devices=(mesh, tuple(axes)),
+    )

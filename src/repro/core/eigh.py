@@ -20,9 +20,8 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.solver import EvdConfig, plan_for
+from repro.solver import EvdConfig, plan_for, solve_many
 from repro.solver.plan import tridiagonalize  # noqa: F401  (re-export)
 
 __all__ = [
@@ -88,23 +87,29 @@ def eigvalsh(A: jax.Array, **kw) -> jax.Array:
     return eigh(A, eigenvectors=False, **kw)
 
 
-def eigh_batched(A: jax.Array, **kw):
-    """eigh over a batch of matrices (..., n, n) via vmap.
+def eigh_batched(
+    A: jax.Array,
+    *,
+    config: Optional[EvdConfig] = None,
+    eigenvectors: bool = True,
+    b: Optional[int] = None,
+    nb: Optional[int] = None,
+    method: str = "two_stage",
+    chase: str = "wavefront",
+    max_sweeps: int = 16,
+):
+    """eigh over a batch of matrices (..., n, n).
 
-    Returns ``(w, V)`` — or just ``w`` when called with
-    ``eigenvectors=False`` (see also :func:`eigvalsh_batched`).
+    Delegates to :func:`repro.solver.solve_many`: the plan is resolved ONCE
+    for the whole batch (one cached ``BatchPlan``, one compile — not one
+    plan resolution per vmap lane), so a batched call shares its executable
+    with every other same-(n, batch, config) consumer.  Returns ``(w, V)``
+    — or just ``w`` when called with ``eigenvectors=False`` (see also
+    :func:`eigvalsh_batched`).
     """
-    batch_shape = A.shape[:-2]
-    n = A.shape[-1]
-    flat = A.reshape((-1, n, n))
-    out = jax.vmap(lambda M: eigh(M, **kw))(flat)
-    if kw.get("eigenvectors", True):
-        w, V = out
-        return (
-            w.reshape(batch_shape + w.shape[1:]),
-            V.reshape(batch_shape + V.shape[1:]),
-        )
-    return out.reshape(batch_shape + out.shape[1:])
+    cfg = _as_config(config, b=b, nb=nb, method=method, chase=chase,
+                     max_sweeps=max_sweeps)
+    return solve_many(A, cfg, eigenvectors=eigenvectors)
 
 
 def eigvalsh_batched(A: jax.Array, **kw) -> jax.Array:

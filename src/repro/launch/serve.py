@@ -45,7 +45,6 @@ def main(argv=None):
 
     # Prefill by teacher-forced decode steps (cache-populating).
     t0 = time.perf_counter()
-    tok = prompts[:, 0:1]
     for t in range(args.prompt_len):
         nxt, cache = serve_step(params, cache, prompts[:, t : t + 1])
     t_prefill = time.perf_counter() - t0

@@ -3,18 +3,17 @@
 Shampoo (Gupta et al., cited as [20] by the paper) preconditions each 2-D
 parameter block G with L^{-1/4} G R^{-1/4} where L = EMA[G G^T],
 R = EMA[G^T G].  The inverse fourth roots are symmetric-EVD problems — the
-exact workload the paper accelerates — computed here by
-``repro.core.inverse_pth_root`` (DBR band reduction -> wavefront bulge
-chasing -> bisection), batched over ALL parameter blocks at once and
-optionally sharded over the mesh with the compat ``shard_map``
-(``repro.backend.compat``).  All solver tuning flows through ONE field:
-``ShampooOptions.evd`` is a frozen :class:`repro.solver.EvdConfig` (method,
-chase, blocking, kernel-backend pin) handed to the plan-based solver — no
-loose ``eigh_b``/``eigh_nb`` kwargs to re-thread.
+exact workload the paper accelerates — computed by ONE call to
+``repro.solver.solve_many(stats, evd, op="inverse_pth_root")`` per refresh:
+the batched front door owns the plan cache, the batch padding, and (when
+``precond_mesh`` is set) the shard_map routing, so this file carries no
+bespoke padding/sharding plumbing.  All solver tuning flows through ONE
+field: ``ShampooOptions.evd`` is a frozen :class:`repro.solver.EvdConfig`
+(method, chase, blocking, kernel-backend pin).
 
 Layout: every eligible parameter is cut into (block, block) tiles; all tiles
 across the whole model are stacked into ONE (NB, bs, bs) batch so the solver
-runs as a single vmapped/sharded call — the TPU-native "many medium
+runs as a single batched/sharded call — the TPU-native "many medium
 matrices" regime (DESIGN.md §3).  1-D / embedding params fall back to Adam.
 
 Grafting: AdaGrad-norm grafting (update rescaled to the diagonal-Adam update
@@ -30,8 +29,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .base import Optimizer, clip_by_global_norm
-from repro.core.eigh import inverse_pth_root
-from repro.solver import EvdConfig
+from repro.solver import EvdConfig, solve_many
 
 __all__ = ["shampoo", "ShampooState", "ShampooOptions"]
 
@@ -47,7 +45,6 @@ class ShampooOptions:
     max_dim_for_shampoo: int = 65536
     vocab_threshold: int = 16384    # leaves with a dim this big use Adam
     evd: EvdConfig = EvdConfig(b=8, nb=64)  # the solver plan config
-    batch_pad: int = 512            # pad NB so stats shard on any mesh
     precond_mesh: Any = None        # optional (mesh, axes) to shard the EVD batch
 
 
@@ -140,44 +137,39 @@ def shampoo(
                 plan["offset"] = offset
                 offset += plan["count"]
             plans.append(plan)
-        # Pad the global block batch so the stacked stats arrays shard onto
-        # any mesh up to 512 chips (padded blocks cost one ridged EVD each).
-        padded = -(-max(offset, 1) // opts.batch_pad) * opts.batch_pad
-        return plans, padded
+        # Mesh-divisibility padding is solve_many's job now (PadPolicy
+        # identity lanes); the stats batch is exactly the block count.
+        return plans, max(offset, 1)
 
     def init(params):
         plans, nb = make_plans(params)
         zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
         def eye():  # distinct buffers: donation forbids aliased leaves
-            return jnp.tile(jnp.eye(bs, dtype=jnp.float32), (max(nb, 1), 1, 1))
+            return jnp.tile(jnp.eye(bs, dtype=jnp.float32), (nb, 1, 1))
 
         return ShampooState(
             step=jnp.zeros((), jnp.int32),
             mu=jax.tree_util.tree_map(zeros, params),
             nu=jax.tree_util.tree_map(zeros, params),
-            stats_l=jnp.zeros((max(nb, 1), bs, bs), jnp.float32),
-            stats_r=jnp.zeros((max(nb, 1), bs, bs), jnp.float32),
+            stats_l=jnp.zeros((nb, bs, bs), jnp.float32),
+            stats_r=jnp.zeros((nb, bs, bs), jnp.float32),
             pre_l=eye(),
             pre_r=eye(),
         )
 
     def _roots(stats):
-        # The EvdConfig carries any kernel-backend pin; the plan the solver
-        # builds from it scopes the registry override around its own trace.
-        if opts.precond_mesh is not None:
-            from repro.core.distributed import sharded_inverse_roots
-
-            mesh, axes = opts.precond_mesh
-            return sharded_inverse_roots(
-                mesh, axes, stats, 4, eps=opts.eps, config=opts.evd
-            )
-        f = lambda M: inverse_pth_root(M, 4, eps=opts.eps, config=opts.evd)
-        return jax.vmap(f)(stats)
+        # ONE solve_many call owns plan caching, batch padding, and (with
+        # precond_mesh) the shard_map routing; the EvdConfig carries any
+        # kernel-backend pin into the plan it builds.
+        return solve_many(
+            stats, opts.evd, op="inverse_pth_root", p=4, eps=opts.eps,
+            devices=opts.precond_mesh,
+        )
 
     def update(grads, state, params):
         paths, gleaves, treedef = _flatten_with_paths(grads)
         _, pleaves, _ = _flatten_with_paths(params)
-        plans, nb = make_plans(params)
+        plans, _ = make_plans(params)
         grads_f = [g.astype(jnp.float32) for g in gleaves]
         if grad_clip is not None:
             clipped, _ = clip_by_global_norm(grads_f, grad_clip)
@@ -198,8 +190,6 @@ def shampoo(
         ]
         if blocks:
             G = jnp.concatenate(blocks, axis=0)
-            if G.shape[0] < nb:  # pad to the sharded stats batch
-                G = jnp.pad(G, ((0, nb - G.shape[0]), (0, 0), (0, 0)))
             L = opts.beta2 * state.stats_l + (1 - opts.beta2) * jnp.einsum(
                 "kmn,kpn->kmp", G, G
             )

@@ -8,6 +8,16 @@ The plan/execute split (cuSOLVER's handle/workspace model, JAX-shaped):
     pl = plan(n, jnp.float32, cfg)     # blocking autotuned + cached
     w, V = pl(A)                       # jit-cached execution, no retrace
 
+Multi-matrix consumers go through ONE front door — ``solve_many`` buckets
+heterogeneous shapes under a :class:`PadPolicy`, runs one cached
+:class:`BatchPlan` per bucket, and scatters results back in input order
+(optionally sharded over a mesh via ``devices=``):
+
+    from repro.solver import PadPolicy, solve_many
+
+    results = solve_many([A32, A48, B32], cfg)          # [(w, V), ...]
+    X = solve_many(stats, cfg, op="inverse_pth_root")   # Shampoo refresh
+
 ``repro.core.eigh`` / ``eigvalsh`` / ``inverse_pth_root`` remain as thin
 legacy wrappers over this module.
 """
@@ -27,6 +37,8 @@ from .plan import (
     trace_count,
     tridiagonalize,
 )
+from .batch import BatchPlan, PadPolicy, batch_plan
+from .executor import solve_many
 
 __all__ = [
     "EvdConfig",
@@ -45,4 +57,8 @@ __all__ = [
     "clear_plan_cache",
     "trace_count",
     "tridiagonalize",
+    "BatchPlan",
+    "PadPolicy",
+    "batch_plan",
+    "solve_many",
 ]

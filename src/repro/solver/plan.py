@@ -297,8 +297,9 @@ def plan_cache_size() -> int:
 _TRACE_COUNTS: Counter = Counter()
 
 
-def trace_count(pl: Optional[EvdPlan] = None) -> int:
-    """Traces recorded for ``pl`` (or all plans when None)."""
+def trace_count(pl=None) -> int:
+    """Traces recorded for ``pl`` — an :class:`EvdPlan` or a
+    :class:`~repro.solver.batch.BatchPlan` — or all plans when None."""
     if pl is None:
         return sum(_TRACE_COUNTS.values())
     return sum(v for (p, _), v in _TRACE_COUNTS.items() if p == pl)

@@ -53,6 +53,67 @@ def test_distributed_band_reduce_and_roots():
     assert "DIST_OK" in out
 
 
+def test_sharded_inverse_roots_parity_with_unsharded():
+    """The deprecated shim (now solve_many devices=) must match the
+    unsharded per-matrix inverse_pth_root on a forced 8-device CPU mesh,
+    and the solve_many front door must accept a batch that does NOT divide
+    the device count (identity-lane padding)."""
+    out = run_sub("""
+        import warnings
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import inverse_pth_root
+        from repro.core.distributed import sharded_inverse_roots
+        from repro.solver import EvdConfig, solve_many
+        from repro.backend.compat import make_mesh
+        mesh = make_mesh((8,), ("x",))
+        cfg = EvdConfig(b=4, nb=8)
+        rng = np.random.default_rng(7)
+        n, B = 16, 16
+        G = rng.normal(size=(B, n, n)).astype(np.float32)
+        S = jnp.asarray(np.einsum('bij,bkj->bik', G, G)
+                        + 0.1 * np.eye(n, dtype=np.float32))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            R_sh = sharded_inverse_roots(mesh, ("x",), S, 4, config=cfg)
+        R_ref = jnp.stack([inverse_pth_root(M, 4, config=cfg) for M in S])
+        err = float(jnp.abs(R_sh - R_ref).max() / jnp.abs(R_ref).max())
+        assert err < 1e-5, err
+        # front door, batch 12 on 8 devices: padded to 16 internally
+        R12 = solve_many(S[:12], cfg, op="inverse_pth_root",
+                         devices=(mesh, ("x",)))
+        err12 = float(jnp.abs(R12 - R_ref[:12]).max() / jnp.abs(R_ref).max())
+        assert err12 < 1e-5, err12
+        print("ROOTS_PARITY_OK", err, err12)
+    """)
+    assert "ROOTS_PARITY_OK" in out
+
+
+def test_solve_many_sharded_eigh_heterogeneous():
+    """solve_many devices= routes every bucket through shard_map; results
+    must match single-device solve_many bit-for-bit per matrix size."""
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.solver import EvdConfig, solve_many
+        from repro.backend.compat import make_mesh
+        mesh = make_mesh((8,), ("x",))
+        cfg = EvdConfig(b=4, nb=8)
+        rng = np.random.default_rng(9)
+        def sym(n):
+            a = rng.normal(size=(n, n)).astype(np.float32)
+            return jnp.asarray(a + a.T)
+        mats = [sym(16), sym(24), sym(16), sym(24), sym(16)]
+        res_sh = solve_many(mats, cfg, devices=mesh)
+        res_1d = solve_many(mats, cfg)
+        for (w_s, V_s), (w_1, V_1) in zip(res_sh, res_1d):
+            assert w_s.shape == w_1.shape and V_s.shape == V_1.shape
+            werr = float(jnp.abs(w_s - w_1).max())
+            verr = float(jnp.abs(V_s - V_1).max())
+            assert werr < 1e-5 and verr < 1e-5, (werr, verr)
+        print("SHARDED_HET_OK")
+    """)
+    assert "SHARDED_HET_OK" in out
+
+
 def test_compressed_psum_multidevice():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp

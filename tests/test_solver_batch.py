@@ -1,0 +1,340 @@
+"""Batched solve API: solve_many bucketing/scatter, BatchPlan caching and
+one-compile-per-bucket, PadPolicy ridge-identity padding, and the Shampoo
+rewire parity (solve_many == the old per-matrix vmap path, bit for bit)."""
+import numpy as np
+import pytest
+import scipy.linalg as sla
+import jax
+import jax.numpy as jnp
+
+from repro.core import eigh_batched, eigvalsh_batched
+from repro.solver import (
+    BatchPlan,
+    EvdConfig,
+    PadPolicy,
+    batch_plan,
+    by_count,
+    by_index,
+    plan,
+    solve_many,
+    trace_count,
+)
+from conftest import random_symmetric, random_psd
+
+
+CFG = EvdConfig(b=4, nb=16)
+
+
+def _sym(rng, n):
+    return jnp.asarray(random_symmetric(rng, n))
+
+
+def _psd(rng, n):
+    return jnp.asarray(random_psd(rng, n))
+
+
+# -------------------------------------------------------------- pad policy
+def test_pad_policy_validation():
+    with pytest.raises(ValueError):
+        PadPolicy(bucket_sizes=())
+    with pytest.raises(ValueError):
+        PadPolicy(bucket_sizes=(0, 32))
+    with pytest.raises(ValueError):
+        PadPolicy(batch_multiple=0)
+    with pytest.raises(ValueError):
+        PadPolicy(ridge=0.0)
+    assert PadPolicy(bucket_sizes=(64, 32)).bucket_sizes == (32, 64)  # sorted
+    assert PadPolicy().bucket_for(17) == 17
+    assert PadPolicy(bucket_sizes=(32, 64)).bucket_for(17) == 32
+    with pytest.raises(ValueError):
+        PadPolicy(bucket_sizes=(32,)).bucket_for(48)
+
+
+# ------------------------------------------------------------- batch plans
+def test_batch_plan_cache_returns_same_object():
+    b1 = batch_plan(32, 4, jnp.float32, CFG)
+    b2 = batch_plan(32, 4, jnp.float32, EvdConfig(b=4, nb=16))
+    assert b1 is b2
+    assert isinstance(b1, BatchPlan)
+    # shares the base plan with the scalar cache
+    assert b1.base is plan(32, jnp.float32, CFG)
+    # different batch / n -> different plan
+    assert batch_plan(32, 5, jnp.float32, CFG) is not b1
+    assert batch_plan(48, 4, jnp.float32, CFG) is not b1
+    with pytest.raises(ValueError):
+        batch_plan(32, 0, jnp.float32, CFG)
+
+
+def test_batch_plan_rejects_mismatched_operand(rng):
+    bpl = batch_plan(16, 3, jnp.float32, CFG)
+    with pytest.raises(ValueError):
+        bpl(jnp.stack([_sym(rng, 16) for _ in range(4)]))  # wrong batch
+    with pytest.raises(ValueError):
+        bpl(jnp.stack([_sym(rng, 24) for _ in range(3)]))  # wrong n
+    with pytest.raises(ValueError):
+        bpl.inverse_pth_root(jnp.zeros((3, 16, 16), jnp.bfloat16), 4)
+
+
+def test_batch_plan_partial_spectrum_rejects_inverse_root(rng):
+    bpl = batch_plan(16, 2, jnp.float32, EvdConfig(b=4, nb=8, spectrum=by_count(4)))
+    with pytest.raises(ValueError):
+        bpl.inverse_pth_root(jnp.stack([_psd(rng, 16)] * 2), 4)
+    with pytest.raises(ValueError):
+        solve_many(
+            jnp.stack([_psd(rng, 16)] * 2),
+            EvdConfig(b=4, nb=8, spectrum=by_count(4)),
+            op="inverse_pth_root",
+        )
+
+
+# ------------------------------------------------- acceptance: bit identity
+def test_solve_many_heterogeneous_bit_identical_to_plan_loop(rng):
+    """The acceptance criterion: a heterogeneous mix through solve_many is
+    bit-identical (same config) to the per-matrix EvdPlan loop."""
+    mats = [_sym(rng, 32), _sym(rng, 48), _sym(rng, 32), _sym(rng, 16)]
+    results = solve_many(mats, CFG)
+    assert isinstance(results, list) and len(results) == len(mats)
+    for M, (w, V) in zip(mats, results):
+        w_ref, V_ref = plan(M.shape[0], jnp.float32, CFG)(M)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(w_ref))
+        np.testing.assert_array_equal(np.asarray(V), np.asarray(V_ref))
+
+
+def test_solve_many_inverse_root_bit_identical_to_plan_loop(rng):
+    S = jnp.stack([_psd(rng, 16) for _ in range(4)])
+    X = solve_many(S, CFG, op="inverse_pth_root", p=4)
+    pl = plan(16, jnp.float32, CFG)
+    X_ref = jnp.stack([pl.inverse_pth_root(M, 4) for M in S])
+    np.testing.assert_array_equal(np.asarray(X), np.asarray(X_ref))
+
+
+# ------------------------------------------- acceptance: one compile/bucket
+def test_solve_many_one_compile_per_bucket(rng):
+    cfg = EvdConfig(b=4, nb=16, tol=1e-5)  # unique config: fresh trace keys
+    mats = [_sym(rng, 32), _sym(rng, 48), _sym(rng, 32), _sym(rng, 16)]
+    plans = [
+        batch_plan(32, 2, jnp.float32, cfg),
+        batch_plan(48, 1, jnp.float32, cfg),
+        batch_plan(16, 1, jnp.float32, cfg),
+    ]
+    before = [trace_count(bp) for bp in plans]
+    solve_many(mats, cfg)
+    solve_many(mats, cfg)  # second call: zero retraces
+    deltas = [trace_count(bp) - b for bp, b in zip(plans, before)]
+    assert deltas == [1, 1, 1], deltas
+
+
+def test_eigh_batched_single_compile(rng):
+    """Satellite: one batched eigh call resolves the plan once and compiles
+    exactly one executable (plan resolution is NOT inside the vmap lanes)."""
+    cfg_kw = dict(b=4, nb=8, max_sweeps=15)  # unique config: fresh trace keys
+    A = jnp.stack([_sym(rng, 16) for _ in range(4)])
+    bpl = batch_plan(16, 4, jnp.float32, EvdConfig(**cfg_kw))
+    before = trace_count(bpl)
+    w, V = eigh_batched(A, **cfg_kw)
+    assert trace_count(bpl) == before + 1
+    eigh_batched(A, **cfg_kw)
+    w2 = eigvalsh_batched(A, **cfg_kw)  # its own variant: one more trace
+    assert trace_count(bpl) == before + 2
+    for i in range(4):
+        w_ref = np.sort(sla.eigvalsh(np.asarray(A[i], np.float64)))
+        np.testing.assert_allclose(
+            np.sort(np.asarray(w[i])), w_ref, atol=3e-4 * np.abs(w_ref).max()
+        )
+    # values-only runs the reflector-free fast path — close, not bitwise
+    np.testing.assert_allclose(
+        np.asarray(w), np.asarray(w2), atol=1e-4 * np.abs(np.asarray(w)).max()
+    )
+
+
+# --------------------------------------------------------- input structures
+def test_solve_many_stacked_array_matches_eigh_batched(rng):
+    A = jnp.stack([_sym(rng, 24) for _ in range(5)])
+    w, V = solve_many(A, CFG)
+    assert w.shape == (5, 24) and V.shape == (5, 24, 24)
+    w_b, V_b = eigh_batched(A, config=CFG)
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(w_b))
+    np.testing.assert_array_equal(np.asarray(V), np.asarray(V_b))
+
+
+def test_solve_many_multidim_batch_shape(rng):
+    A = jnp.stack([_sym(rng, 16) for _ in range(6)]).reshape(2, 3, 16, 16)
+    w, V = solve_many(A, CFG)
+    assert w.shape == (2, 3, 16) and V.shape == (2, 3, 16, 16)
+    w_flat, _ = solve_many(A.reshape(6, 16, 16), CFG)
+    np.testing.assert_array_equal(np.asarray(w).reshape(6, 16), np.asarray(w_flat))
+
+
+def test_solve_many_pytree_input(rng):
+    tree = {"a": _sym(rng, 16), "b": jnp.stack([_sym(rng, 24) for _ in range(3)])}
+    out = solve_many(tree, CFG, eigenvectors=False)
+    assert set(out) == {"a", "b"}
+    assert out["a"].shape == (16,) and out["b"].shape == (3, 24)
+    np.testing.assert_array_equal(
+        np.asarray(out["a"]), np.asarray(plan(16, jnp.float32, CFG).eigvals(tree["a"]))
+    )
+
+
+def test_solve_many_empty_batch(rng):
+    """Regression: (0, n, n) leaves must yield empty results (the old vmap
+    path accepted them), not a batch_plan ValueError."""
+    w, V = solve_many(jnp.zeros((0, 16, 16), jnp.float32), CFG)
+    assert w.shape == (0, 16) and V.shape == (0, 16, 16)
+    w = eigvalsh_batched(jnp.zeros((0, 16, 16), jnp.float32), b=4, nb=8)
+    assert w.shape == (0, 16)
+    cfg_k = EvdConfig(b=4, nb=8, spectrum=by_count(3))
+    w, V = solve_many(jnp.zeros((0, 16, 16), jnp.float32), cfg_k)
+    assert w.shape == (0, 3) and V.shape == (0, 16, 3)
+    X = solve_many(jnp.zeros((0, 16, 16), jnp.float32), CFG, op="inverse_pth_root")
+    assert X.shape == (0, 16, 16)
+    # mixed empty + non-empty leaves
+    out = solve_many(
+        {"e": jnp.zeros((0, 16, 16), jnp.float32), "f": _sym(rng, 16)},
+        CFG, eigenvectors=False,
+    )
+    assert out["e"].shape == (0, 16) and out["f"].shape == (16,)
+
+
+def test_solve_many_rejects_bad_input(rng):
+    with pytest.raises(ValueError):
+        solve_many([jnp.zeros((3, 4))], CFG)  # non-square
+    with pytest.raises(ValueError):
+        solve_many([jnp.zeros(4)], CFG)  # not a matrix
+    with pytest.raises(ValueError):
+        solve_many([_sym(rng, 8)], CFG, op="cholesky")  # unknown op
+    assert solve_many([], CFG) == []
+
+
+# ------------------------------------------------------- padding semantics
+def test_bucketed_padding_matches_scipy(rng):
+    pol = PadPolicy(bucket_sizes=(32, 64))
+    mats = [_sym(rng, 20), _sym(rng, 30), _sym(rng, 50)]
+    results = solve_many(mats, CFG, pad=pol)
+    for M, (w, V) in zip(mats, results):
+        n = M.shape[0]
+        assert w.shape == (n,) and V.shape == (n, n)
+        w_ref = np.sort(sla.eigvalsh(np.asarray(M, np.float64)))
+        scale = max(np.abs(w_ref).max(), 1.0)
+        np.testing.assert_allclose(np.asarray(w), w_ref, atol=2e-3 * scale)
+        resid = np.asarray(M) @ np.asarray(V) - np.asarray(V) * np.asarray(w)[None, :]
+        assert np.abs(resid).max() < 5e-3 * scale
+
+
+def test_bucketed_partial_spectrum(rng):
+    pol = PadPolicy(bucket_sizes=(32,))
+    cfg = EvdConfig(b=4, nb=16, spectrum=by_count(3))
+    mats = [_sym(rng, 20), _sym(rng, 28)]
+    results = solve_many(mats, cfg, pad=pol)
+    for M, (w, V) in zip(mats, results):
+        n = M.shape[0]
+        assert w.shape == (3,) and V.shape == (n, 3)
+        w_ref = np.sort(sla.eigvalsh(np.asarray(M, np.float64)))
+        np.testing.assert_allclose(
+            np.asarray(w), w_ref[-3:], atol=2e-3 * np.abs(w_ref).max()
+        )
+    # index windows too
+    cfg_i = EvdConfig(b=4, nb=16, spectrum=by_index(5, 10))
+    (w_i, V_i), = solve_many([mats[0]], cfg_i, pad=pol)
+    w_ref = np.sort(sla.eigvalsh(np.asarray(mats[0], np.float64)))
+    assert w_i.shape == (5,) and V_i.shape == (20, 5)
+    np.testing.assert_allclose(
+        np.asarray(w_i), w_ref[5:10], atol=2e-3 * np.abs(w_ref).max()
+    )
+
+
+def test_bucketed_inverse_root(rng):
+    pol = PadPolicy(bucket_sizes=(32,))
+    mats = [_psd(rng, 20), _psd(rng, 28)]
+    roots = solve_many(mats, CFG, op="inverse_pth_root", p=4, pad=pol)
+    for S, X in zip(mats, roots):
+        n = S.shape[0]
+        assert X.shape == (n, n)
+        err = np.abs(
+            np.linalg.matrix_power(np.asarray(X, np.float64), 4)
+            @ np.asarray(S, np.float64)
+            - np.eye(n)
+        ).max()
+        assert err < 0.05, err
+
+
+def test_batch_multiple_padding_preserves_results(rng):
+    A = jnp.stack([_sym(rng, 16) for _ in range(3)])
+    w_plain = solve_many(A, CFG, eigenvectors=False)
+    w_pad = solve_many(A, CFG, eigenvectors=False, pad=PadPolicy(batch_multiple=4))
+    np.testing.assert_array_equal(np.asarray(w_plain), np.asarray(w_pad))
+    # and the padded call really ran the batch-4 plan
+    assert trace_count(batch_plan(16, 4, jnp.float32, CFG)) >= 1
+
+
+def test_donate_smoke(rng):
+    A = jnp.stack([_sym(rng, 16) for _ in range(2)])
+    w_keep = solve_many(A + 0.0, CFG, eigenvectors=False)
+    w_don = solve_many(A + 0.0, CFG, eigenvectors=False, pad=PadPolicy(donate=True))
+    np.testing.assert_array_equal(np.asarray(w_keep), np.asarray(w_don))
+
+
+# ----------------------------------------------------------- jit / consumers
+def test_solve_many_composes_under_jit(rng):
+    """The Shampoo path: solve_many must trace cleanly inside an outer jit."""
+    S = jnp.stack([_psd(rng, 16) for _ in range(4)])
+    f = jax.jit(lambda s: solve_many(s, CFG, op="inverse_pth_root"))
+    X_jit = f(S)
+    X_eager = solve_many(S, CFG, op="inverse_pth_root")
+    np.testing.assert_allclose(
+        np.asarray(X_jit), np.asarray(X_eager), atol=1e-5
+    )
+
+
+def test_shampoo_update_identical_before_after_rewire(rng):
+    """Acceptance: Shampoo's step produces identical updates whether the
+    refresh goes through solve_many (new) or the old per-matrix vmap of the
+    legacy inverse_pth_root wrapper, on a fixed-seed smoke model."""
+    import importlib
+
+    sh = importlib.import_module("repro.optim.shampoo")
+    from repro.core.eigh import inverse_pth_root
+    from repro.optim import ShampooOptions
+
+    local = np.random.default_rng(11)
+    params = {
+        "w1": jnp.asarray(local.normal(size=(16, 24)).astype(np.float32)),
+        "w2": jnp.asarray(local.normal(size=(24, 8)).astype(np.float32)),
+        "b": jnp.asarray(local.normal(size=(24,)).astype(np.float32)),
+    }
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.asarray(local.normal(size=p.shape).astype(np.float32)), params
+    )
+    opts = ShampooOptions(block_size=8, update_interval=1, evd=EvdConfig(b=4, nb=8))
+
+    def run_once():
+        opt = sh.shampoo(1e-2, opts=opts)
+        state = opt.init(params)
+        updates, new_state = opt.update(grads, state, params)
+        return updates, new_state
+
+    new_updates, new_state = run_once()
+
+    def legacy_solve_many(stats, config, *, op, p, eps, devices):
+        assert op == "inverse_pth_root" and devices is None
+        return jax.vmap(
+            lambda M: inverse_pth_root(M, p, eps=eps, config=config)
+        )(stats)
+
+    orig = sh.solve_many
+    sh.solve_many = legacy_solve_many
+    try:
+        old_updates, old_state = run_once()
+    finally:
+        sh.solve_many = orig
+
+    for new, old in zip(
+        jax.tree_util.tree_leaves(new_updates), jax.tree_util.tree_leaves(old_updates)
+    ):
+        np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
+    np.testing.assert_array_equal(
+        np.asarray(new_state.pre_l), np.asarray(old_state.pre_l)
+    )
+    assert all(
+        np.isfinite(np.asarray(u)).all()
+        for u in jax.tree_util.tree_leaves(new_updates)
+    )

@@ -65,19 +65,21 @@ def test_optimizer_descends(rng, make_opt):
 
 
 def test_shampoo_uses_paper_evd(rng, monkeypatch):
-    """The preconditioner refresh must go through repro.core.inverse_pth_root."""
+    """The preconditioner refresh must go through the batched solver front
+    door (solve_many with op="inverse_pth_root" — the paper's EVD)."""
     import importlib
 
     sh = importlib.import_module("repro.optim.shampoo")
 
     calls = {"n": 0}
-    orig = sh.inverse_pth_root
+    orig = sh.solve_many
 
     def spy(*a, **k):
         calls["n"] += 1
+        assert k.get("op") == "inverse_pth_root"
         return orig(*a, **k)
 
-    monkeypatch.setattr(sh, "inverse_pth_root", spy)
+    monkeypatch.setattr(sh, "solve_many", spy)
     loss_fn, params = _quadratic(rng, n=16)
     opt = sh.shampoo(0.1, opts=ShampooOptions(block_size=8, update_interval=2, evd=EvdConfig(b=4, nb=8)))
     state = opt.init(params)
