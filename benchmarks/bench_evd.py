@@ -7,6 +7,13 @@ setting) and full eigenvectors.  Correctness is asserted on every run.
 Solver calls go through the plan API (one cached EvdPlan per (n, config)),
 including a partial-spectrum row: ``by_count(8)`` runs 8 inverse-iteration
 lanes instead of n — the eigenvector-phase win partial plans buy.
+
+Per-stage breakdown: each pipeline stage (tridiagonalization, bisection,
+inverse iteration, back-transform) is also timed in isolation and emitted
+with a ``stage=`` record field, with the back-transform measured on BOTH
+paths (``path="blocked"`` — the compact-WY GEMM default — and
+``path="scan"`` — the per-reflector oracle), so the BENCH trajectory shows
+where the eigenvector phase's time goes and what blocking buys.
 """
 from __future__ import annotations
 
@@ -14,9 +21,78 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import jacobi_eigh
+from repro.core import (
+    apply_q2,
+    apply_q2_blocked,
+    apply_q_left,
+    apply_q_left_blocked,
+    band_reduce,
+    band_to_tridiag,
+    eigvalsh_tridiag_range,
+    eigvecs_inverse_iteration,
+    extract_tridiag,
+    jacobi_eigh,
+)
 from repro.solver import EvdConfig, by_count, plan, solve_many
+from repro.solver.autotune import backtransform_group
 from benchmarks.common import bench, emit, is_smoke
+
+
+def _stage_breakdown(A, n: int, b: int, nb: int, backend: str):
+    """Time each EVD pipeline stage in isolation (full spectrum)."""
+    group = backtransform_group(n, b)
+
+    @jax.jit
+    def tridiag(A):
+        Bband, refl1 = band_reduce(A, b, nb, return_reflectors=True, merge_ts=True)
+        T, log2 = band_to_tridiag(Bband, b, return_log=True)
+        d, e = extract_tridiag(T)
+        return d, e, refl1, log2
+
+    @jax.jit
+    def bisect(d, e):
+        return eigvalsh_tridiag_range(d, e, start=0, count=n, max_iter=48)
+
+    @jax.jit
+    def bt_blocked(refl1, log2, X):
+        return apply_q_left_blocked(refl1, apply_q2_blocked(log2, X, group=group))
+
+    @jax.jit
+    def bt_scan(refl1, log2, X):
+        return apply_q_left(refl1, apply_q2(log2, X))
+
+    invit = jax.jit(eigvecs_inverse_iteration)
+
+    d, e, refl1, log2 = tridiag(0.5 * (A + A.T))
+    w = bisect(d, e)
+    VT = invit(d, e, w)
+    Vb = bt_blocked(refl1, log2, VT)
+    Vs = bt_scan(refl1, log2, VT)
+    err = np.abs(np.asarray(Vb) - np.asarray(Vs)).max()
+    assert err < 1e-4, f"blocked-vs-scan back-transform diverged: {err}"
+
+    t_tri = bench(tridiag, A)
+    t_bis = bench(bisect, d, e)
+    t_inv = bench(invit, d, e, w)
+    t_bt_blocked = bench(bt_blocked, refl1, log2, VT)
+    t_bt_scan = bench(bt_scan, refl1, log2, VT)
+
+    common = dict(op="evd_stage", n=n, backend=backend)
+    emit(f"evd_stage_tridiag_n{n}", t_tri, "", stage="tridiag", **common)
+    emit(f"evd_stage_bisection_n{n}", t_bis, "", stage="bisection", **common)
+    emit(
+        f"evd_stage_inverse_iteration_n{n}", t_inv, "",
+        stage="inverse_iteration", **common,
+    )
+    emit(
+        f"evd_stage_backtransform_blocked_n{n}", t_bt_blocked,
+        f"speedup_vs_scan={t_bt_scan / t_bt_blocked:.2f};G={group}",
+        stage="backtransform", path="blocked", **common,
+    )
+    emit(
+        f"evd_stage_backtransform_scan_n{n}", t_bt_scan, "",
+        stage="backtransform", path="scan", **common,
+    )
 
 
 def run():
@@ -45,11 +121,24 @@ def run():
              op="eigvalsh", n=n, backend=pl.backend)
         emit(f"evd_vals_jacobi_n{n}", t_jac, "", op="eigvalsh", n=n, backend="jnp")
 
-        # full EVD with eigenvectors
+        # full EVD with eigenvectors — blocked (default) vs scan back-transform
         f_full = jax.jit(lambda M: pl(M)[1])
         t_full = bench(f_full, A)
         emit(f"evd_full_two_stage_n{n}", t_full, "",
-             op="eigh", n=n, backend=pl.backend)
+             op="eigh", n=n, backend=pl.backend, path="blocked")
+        pl_scan = plan(n, jnp.float32, EvdConfig(b=b, nb=nb, backtransform="scan"))
+        f_full_scan = jax.jit(lambda M: pl_scan(M)[1])
+        np.testing.assert_allclose(
+            np.asarray(f_full_scan(A)), np.asarray(f_full(A)), atol=1e-4
+        )
+        t_full_scan = bench(f_full_scan, A)
+        emit(f"evd_full_two_stage_scan_n{n}", t_full_scan,
+             f"blocked_speedup={t_full_scan/t_full:.2f}",
+             op="eigh", n=n, backend=pl_scan.backend, path="scan")
+
+        # per-stage breakdown (tridiag / bisection / inverse iteration /
+        # back-transform, the latter on both paths)
+        _stage_breakdown(A, n, b, nb, pl.backend)
 
         # partial spectrum: top-8 eigenpairs only — the eigenvector phase
         # (inverse iteration + back-transform) shrinks from n to 8 lanes.

@@ -56,8 +56,13 @@ def emit(
     n: Optional[int] = None,
     dtype: str = "float32",
     backend: Optional[str] = None,
+    **extra,
 ):
-    """Print the CSV row and record the structured fields for the JSON dump."""
+    """Print the CSV row and record the structured fields for the JSON dump.
+
+    ``extra`` keyword fields (e.g. ``stage=``, ``path=`` for the EVD
+    per-stage breakdown) are merged into the structured record verbatim.
+    """
     print(f"{name},{seconds*1e6:.1f},{derived}")
     _RECORDS.append(
         {
@@ -68,6 +73,7 @@ def emit(
             "backend": backend,
             "median_ms": round(seconds * 1e3, 4),
             "derived": derived,
+            **extra,
         }
     )
 

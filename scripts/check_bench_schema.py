@@ -9,6 +9,13 @@ perf-trajectory contract the CI artifact collectors rely on.  A suite that
 emits a row without them (``emit(..., op=None)``) silently drops out of
 the trajectory; this gate turns that into a red build instead.
 
+The EVD suite additionally owes the per-stage breakdown: ``BENCH_evd.json``
+must carry one record per pipeline stage (``stage=`` field — tridiag,
+bisection, inverse_iteration, backtransform) and the back-transform stage
+on BOTH paths (``path="blocked"`` and ``path="scan"``), so the trajectory
+always shows where the eigenvector phase's time goes and what the blocked
+compact-WY path buys over the scan oracle.
+
 Exit status: 0 when every record passes, 1 with a per-record report when
 any field is missing/empty, 2 when no BENCH files were found at all (a
 renamed artifact dir must not green-wash the gate).
@@ -21,6 +28,10 @@ import os
 import sys
 
 REQUIRED = ("op", "n", "dtype", "backend", "median_ms")
+
+# suite-name prefix -> required per-suite structure.
+EVD_REQUIRED_STAGES = ("tridiag", "bisection", "inverse_iteration", "backtransform")
+EVD_REQUIRED_BT_PATHS = ("blocked", "scan")
 
 
 def bench_files(paths):
@@ -48,7 +59,28 @@ def check_file(path):
         if missing:
             name = rec.get("name", f"record[{i}]")
             problems.append(f"{path}: {name} missing {','.join(missing)}")
+    problems.extend(check_evd_stages(path, records))
     return problems, len(records)
+
+
+def check_evd_stages(path, records):
+    """The EVD suite must emit the per-stage breakdown (see module doc)."""
+    if not os.path.basename(path).startswith("BENCH_evd"):
+        return []
+    problems = []
+    stages = {r.get("stage") for r in records if r.get("stage")}
+    for stage in EVD_REQUIRED_STAGES:
+        if stage not in stages:
+            problems.append(f"{path}: no stage-breakdown record for stage={stage}")
+    bt_paths = {
+        r.get("path") for r in records if r.get("stage") == "backtransform"
+    }
+    for p in EVD_REQUIRED_BT_PATHS:
+        if p not in bt_paths:
+            problems.append(
+                f"{path}: backtransform stage missing path={p} record"
+            )
+    return problems
 
 
 def main(argv) -> int:

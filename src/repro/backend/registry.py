@@ -7,6 +7,8 @@ The EVD pipeline has three hot ops (the paper's Table 1 decomposition):
 * ``syr2k``           — the general symmetric rank-2k update behind it.
 * ``bulge_chase``     — band -> tridiagonal wavefront chasing (values-only).
 * ``panel_qr``        — the WY-form panel factorization.
+* ``backtransform_wy`` — the blocked compact-WY eigenvector back-transform
+  (sweep-major grouped Q2 application; see ``repro.core.backtransform``).
 
 Each op maps to one of two backends:
 
@@ -45,7 +47,7 @@ __all__ = [
 
 ENV_VAR = "REPRO_KERNEL_BACKEND"
 BACKENDS = ("pallas", "jnp")  # built-ins; register() can add more names
-OPS = ("trailing_update", "syr2k", "bulge_chase", "panel_qr")
+OPS = ("trailing_update", "syr2k", "bulge_chase", "panel_qr", "backtransform_wy")
 
 _override: Optional[str] = None
 _extra_backends: set = set()
@@ -139,6 +141,7 @@ def _build_impls() -> None:
     # (and to break the kernels -> compat -> registry import cycle).
     global _built
     from repro.kernels import ref as kref
+    from repro.core.backtransform import backtransform_wy_xla
     from repro.core.bulge_chasing import chase_wavefront
     from repro.core.panel_qr import panel_qr_geqrf
 
@@ -155,6 +158,7 @@ def _build_impls() -> None:
     default("syr2k", "jnp", kref.syr2k_ref)
     default("bulge_chase", "jnp", jnp_bulge_chase)
     default("panel_qr", "jnp", panel_qr_geqrf)
+    default("backtransform_wy", "jnp", backtransform_wy_xla)
 
     if probe.pallas_available():
         from repro.kernels import ops as kops
@@ -169,6 +173,7 @@ def _build_impls() -> None:
         default("syr2k", "pallas", pallas_syr2k)
         default("bulge_chase", "pallas", kops.bulge_chase)
         default("panel_qr", "pallas", kops.panel_qr)
+        default("backtransform_wy", "pallas", kops.backtransform_wy)
 
     # Only mark built on success: a failed import above propagates, stays
     # unbuilt, and is retried (surfacing the real error) on the next resolve.

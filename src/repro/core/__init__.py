@@ -26,6 +26,13 @@ from .bulge_chasing import (
     num_wavefronts,
     max_active_sweeps,
 )
+from .backtransform import (
+    apply_q2_blocked,
+    apply_q_left_blocked,
+    backtransform_wy_xla,
+    merge_band_reflectors,
+    sweep_major_log,
+)
 from .direct_tridiag import direct_tridiagonalize, DirectReflectors, apply_q_direct
 from .jacobi import jacobi_eigh, round_robin_pairs
 from .tridiag_eig import (
@@ -67,6 +74,11 @@ __all__ = [
     "extract_tridiag",
     "num_wavefronts",
     "max_active_sweeps",
+    "apply_q2_blocked",
+    "apply_q_left_blocked",
+    "backtransform_wy_xla",
+    "merge_band_reflectors",
+    "sweep_major_log",
     "direct_tridiagonalize",
     "DirectReflectors",
     "apply_q_direct",

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,18 +57,29 @@ class BandReflectors:
        point; zero elsewhere).
     T: (P, b, b) upper-triangular compact-WY factors.
     b: panel width (the bandwidth) — static pytree metadata.
+    blocks: ((panel0, q), ...) — the DBR block structure: block g covers the
+       q consecutive panels starting at ``panel0`` (static metadata; the
+       blocked back-transform merges each block into one rank-q·b reflector).
+    Tm: optional per-block merged compact-WY factors, one (q·b, q·b) upper
+       triangular per block, so H_{p0} .. H_{p0+q-1} = I - V_g Tm_g V_g^T.
+       Populated by ``band_reduce(..., merge_ts=True)`` or
+       :func:`repro.core.backtransform.merge_band_reflectors`.
     """
 
     V: jax.Array
     T: jax.Array
     b: int
+    blocks: Tuple[Tuple[int, int], ...] = ()
+    Tm: Optional[Tuple[jax.Array, ...]] = None
 
     def tree_flatten(self):
-        return (self.V, self.T), (self.b,)
+        return (self.V, self.T, self.Tm), (self.b, self.blocks)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        V, T, Tm = children
+        b, blocks = aux
+        return cls(V=V, T=T, b=b, blocks=blocks, Tm=Tm)
 
 
 def _reduce_block(
@@ -142,6 +153,7 @@ def band_reduce(
     panel_method: str = "geqrf",
     syr2k_update: Optional[Callable] = None,
     return_reflectors: bool = False,
+    merge_ts: bool = False,
 ):
     """Reduce a symmetric matrix to band form with bandwidth ``b``.
 
@@ -156,6 +168,10 @@ def band_reduce(
         active ``repro.backend.registry`` trailing-update kernel (Pallas
         syr2k unless ``REPRO_KERNEL_BACKEND=jnp``).
       return_reflectors: also return :class:`BandReflectors` for Q1.
+      merge_ts: with ``return_reflectors``, also fuse each DBR block's
+        per-panel T factors into one (q·b, q·b) block-reflector T (stored as
+        ``BandReflectors.Tm``) so the blocked back-transform applies rank-q·b
+        GEMMs instead of per-panel rank-b updates.
 
     Returns:
       ``Bband`` (n, n) symmetric banded, and optionally reflectors.
@@ -186,6 +202,7 @@ def band_reduce(
 
     ci = 0
     p = 0  # global panel counter
+    blocks = []
     while n - ci > b:
         m = n - ci
         w = min(nb, m - b)
@@ -195,11 +212,19 @@ def band_reduce(
         q = w // b
         Vall = Vall.at[ci:, p * b : (p + q) * b].set(Vbuf)
         Tall = Tall.at[p : p + q].set(Ts)
+        blocks.append((p, q))
         p += q
         ci += w
 
     if return_reflectors:
-        return B, BandReflectors(V=Vall[:, : p * b], T=Tall[:p], b=b)
+        refl = BandReflectors(
+            V=Vall[:, : p * b], T=Tall[:p], b=b, blocks=tuple(blocks)
+        )
+        if merge_ts:
+            from .backtransform import merge_band_reflectors
+
+            refl = merge_band_reflectors(refl)
+        return B, refl
     return B
 
 

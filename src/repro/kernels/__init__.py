@@ -1,14 +1,22 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-  syr2k   — lower-triangular-tile symmetric rank-2k update (paper §5.2)
-  bulge   — VMEM-resident wavefront bulge chasing (paper §4.2/§5.3)
-  panel   — fused Householder panel QR in WY form (paper §5.1 panel factor)
+  syr2k         — lower-triangular-tile symmetric rank-2k update (paper §5.2)
+  bulge         — VMEM-resident wavefront bulge chasing (paper §4.2/§5.3)
+  panel         — fused Householder panel QR in WY form (paper §5.1)
+  backtransform — VMEM-resident blocked compact-WY eigenvector
+                  back-transform (DESIGN.md §6)
 
 The framework resolves these through ``repro.backend.registry`` (which also
 owns the interpret-mode decision and tile defaults); oracles live in
 ``repro.kernels.ref``.  Kernels execute with ``interpret=True`` off-TPU
 (validation) and compile on real TPUs.
 """
-from .ops import syr2k, trailing_update, bulge_chase, panel_qr
+from .ops import syr2k, trailing_update, bulge_chase, panel_qr, backtransform_wy
 
-__all__ = ["syr2k", "trailing_update", "bulge_chase", "panel_qr"]
+__all__ = [
+    "syr2k",
+    "trailing_update",
+    "bulge_chase",
+    "panel_qr",
+    "backtransform_wy",
+]

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: blocked compact-WY eigenvector back-transform (Q2).
+
+Applies the bulge-chase orthogonal factor Q2 (or its transpose) to the
+eigenvector panel X through the sweep-major regrouped reflector log (see
+``repro.core.backtransform``).  The memory story mirrors the bulge kernel:
+
+* grid = (S,) — one step per sweep, sequential ("arbitrary"); the X output
+  block index is constant, so the ENTIRE padded eigenvector panel stays
+  resident in VMEM across all sweeps and is written back to HBM once.  The
+  scan applier reads and writes X O(n) times; this kernel does it once each
+  way — the back-transform's data movement collapses to the panel size.
+* per-sweep reflectors stream in as a (1, K, b) block (the only HBM traffic
+  inside the grid), selected by an index map that also encodes the sweep
+  direction (reversed for Q2 @ X, forward for Q2^T @ X).
+* within a step, groups of ``group`` consecutive reflectors update one
+  contiguous (b·group)-row slice of the resident panel in place — their row
+  supports are disjoint by the sweep-major invariant, so a group is one
+  branch-free batched update (masked slots carry tau == 0 and no-op).
+
+VMEM budget: 2 · (n + K·b) · m floats (the input and output panels are both
+constant-index, hence both resident) plus one reflector block — full
+eigenvectors (m == n) fit to n ≈ 1000 fp32 on a 16 MB core; partial
+spectra (m == k ≪ n) are far smaller.  Above the budget the jit wrapper in
+``repro.kernels.ops`` falls back to the XLA scan implementation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.backend.compat import tpu_compiler_params, ARBITRARY
+
+__all__ = ["backtransform_wy_pallas"]
+
+
+def _bt_kernel(
+    vs_ref, taus_ref, x_in_ref, x_out_ref, *, S, K, b, group, transpose, m
+):
+    w = pl.program_id(0)
+
+    @pl.when(w == 0)
+    def _copy_in():
+        x_out_ref[...] = x_in_ref[...]
+
+    # Sweep order: forward for Q2^T, reversed for Q2 (the index maps stream
+    # the matching reflector block; this is the same arithmetic).
+    s = w if transpose else S - 1 - w
+    n_groups = -(-K // group)
+    for g in range(n_groups):
+        k0 = g * group
+        gk = min(group, K - k0)
+        r0 = s + 1 + k0 * b
+        P = x_out_ref[pl.ds(r0, gk * b), :].reshape(gk, b, m)
+        V = vs_ref[0, k0 : k0 + gk, :]  # (gk, b)
+        t = taus_ref[0, k0 : k0 + gk]  # (gk,)
+        proj = jnp.sum(V[:, :, None] * P, axis=1)  # (gk, m)
+        upd = t[:, None, None] * V[:, :, None] * proj[:, None, :]
+        x_out_ref[pl.ds(r0, gk * b), :] = (P - upd).reshape(gk * b, m)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("b", "group", "transpose", "interpret")
+)
+def backtransform_wy_pallas(
+    X: jax.Array,
+    vs: jax.Array,
+    taus: jax.Array,
+    *,
+    b: int,
+    group: int,
+    transpose: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked Q2 application, VMEM-resident.
+
+    X: (n, m); vs: (S, K, b) / taus: (S, K) sweep-major (masked tails carry
+    tau == 0).  Matches ``repro.core.backtransform.backtransform_wy_xla`` up
+    to float rounding.
+    """
+    S, K, _ = vs.shape
+    n, m = X.shape
+    group = max(1, min(int(group), K))
+    total = n + K * b  # every (s, group) panel slice stays in bounds
+    Xp = jnp.zeros((total, m), X.dtype).at[:n, :].set(X)
+
+    def order(w):
+        return w if transpose else S - 1 - w
+
+    kernel = functools.partial(
+        _bt_kernel, S=S, K=K, b=b, group=group, transpose=transpose, m=m
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, K, b), lambda w: (order(w), 0, 0)),
+            pl.BlockSpec((1, K), lambda w: (order(w), 0)),
+            pl.BlockSpec((total, m), lambda w: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((total, m), lambda w: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((total, m), X.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=(ARBITRARY,),
+        ),
+        interpret=interpret,
+        name="backtransform_wy",
+    )(vs, taus, Xp)
+    return out[:n, :]

@@ -25,6 +25,7 @@ from repro.backend import probe
 from .syr2k import syr2k_lower_pallas
 from .bulge import bulge_chase_pallas
 from .panel import panel_qr_pallas
+from .backtransform import backtransform_wy_pallas
 
 __all__ = [
     "syr2k",
@@ -32,8 +33,12 @@ __all__ = [
     "bulge_chase",
     "bulge_uses_kernel",
     "panel_qr",
+    "backtransform_wy",
+    "backtransform_uses_kernel",
     "BULGE_VMEM_MAX_N",
     "BULGE_INTERPRET_MAX_N",
+    "BACKTRANSFORM_VMEM_MAX_ELEMS",
+    "BACKTRANSFORM_INTERPRET_MAX_N",
 ]
 
 # fp32 VMEM ceiling for the VMEM-resident bulge kernel (see kernels/bulge.py).
@@ -43,6 +48,15 @@ BULGE_VMEM_MAX_N = 1408
 # wavefronts into the traced program — so above the validation sizes fall
 # back to the XLA wavefront executor (same schedule, scan-rolled).
 BULGE_INTERPRET_MAX_N = 64
+
+# VMEM budget for the resident back-transform panels (+ streamed reflector
+# block), in fp32 elements (~16 MB core).  BOTH the input and output
+# (n + K*b, m) padded panels are constant-index blocks (resident), so the
+# gate counts two copies; above this the XLA scan implementation takes over.
+BACKTRANSFORM_VMEM_MAX_ELEMS = 4 * 1024 * 1024
+# Off-TPU the emulated (S,)-grid costs one interpreter step per sweep;
+# validation sizes only, then fall back to the XLA scan path.
+BACKTRANSFORM_INTERPRET_MAX_N = 48
 
 
 def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
@@ -128,3 +142,55 @@ def panel_qr(panel: jax.Array, *, interpret: Optional[bool] = None):
     """Fused panel QR (V, T, taus, R)."""
     interpret = probe.interpret_mode() if interpret is None else interpret
     return panel_qr_pallas(panel, interpret=interpret)
+
+
+def backtransform_uses_kernel(
+    n: int, m: int, b: int, *, interpret: Optional[bool] = None
+) -> bool:
+    """Whether the blocked back-transform at panel shape (n, m) runs the
+    Pallas kernel (True) or the XLA scan fallback (False).  Single source of
+    truth for the dispatch decision, like :func:`bulge_uses_kernel`.
+    """
+    explicit = interpret is not None
+    interp = probe.interpret_mode() if interpret is None else interpret
+    if interp and not explicit:
+        return n <= BACKTRANSFORM_INTERPRET_MAX_N
+    from repro.core.backtransform import _sweep_shape
+
+    S, K = _sweep_shape(n, b)
+    # Two resident padded panels (in + out) + one streamed reflector block.
+    resident = 2 * (n + K * b) * m + K * b
+    return S > 0 and resident <= BACKTRANSFORM_VMEM_MAX_ELEMS
+
+
+def backtransform_wy(
+    X: jax.Array,
+    vs: jax.Array,
+    taus: jax.Array,
+    *,
+    b: int,
+    group: Optional[int] = None,
+    transpose: bool = False,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Blocked Q2 back-transform via the VMEM-resident kernel; falls back to
+    the XLA scan implementation above the VMEM/interpret ceilings.
+
+    As with :func:`bulge_chase`, an EXPLICIT ``interpret=True`` (validating
+    the kernel itself) runs the kernel regardless of the implied-interpret
+    size ceiling.
+    """
+    n, m = X.shape
+    if not backtransform_uses_kernel(n, m, b, interpret=interpret):
+        from repro.core.backtransform import backtransform_wy_xla
+
+        return backtransform_wy_xla(
+            X, vs, taus, b=b, group=group, transpose=transpose
+        )
+    interpret = probe.interpret_mode() if interpret is None else interpret
+    K = vs.shape[1]
+    group = K if group is None else group
+    return backtransform_wy_pallas(
+        X, vs, taus, b=b, group=int(group), transpose=transpose,
+        interpret=interpret,
+    )

@@ -24,6 +24,7 @@ legacy wrappers over this module.
 from .config import EvdConfig, Spectrum, by_count, by_index, full_spectrum
 from .autotune import (
     BlockingDecision,
+    backtransform_group,
     blocking_defaults,
     resolve_blocking,
     tile_defaults,
@@ -47,6 +48,7 @@ __all__ = [
     "by_index",
     "full_spectrum",
     "BlockingDecision",
+    "backtransform_group",
     "blocking_defaults",
     "resolve_blocking",
     "tile_defaults",

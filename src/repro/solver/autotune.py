@@ -33,8 +33,10 @@ __all__ = [
     "resolve_blocking",
     "blocking_defaults",
     "tile_defaults",
+    "backtransform_group",
     "DEFAULT_B",
     "DEFAULT_NB",
+    "DEFAULT_BT_GROUP",
 ]
 
 DEFAULT_B = 8
@@ -53,6 +55,24 @@ _BLOCKING_TABLE = {
     None: (  # any non-TPU platform
         (128, 8, 32),
         (None, 8, 64),
+    ),
+}
+
+# Blocked back-transform WY group size G: each sweep's reflectors are
+# applied in groups of G consecutive k's, i.e. contiguous (b·G)-row panel
+# updates (repro.core.backtransform).  The TPU kernel wants wide resident
+# panels (fewer in-VMEM slice round-trips); interpret/CPU platforms keep
+# groups moderate so the unrolled per-sweep group loop stays cheap.
+# (n_upper_exclusive | None, G) rows scanned in order, like the blocking
+# table; G is clamped to the per-sweep reflector count at plan time.
+DEFAULT_BT_GROUP = 8
+_BT_GROUP_TABLE = {
+    "tpu": (
+        (1024, 8),
+        (None, 16),
+    ),
+    None: (
+        (None, 8),
     ),
 }
 
@@ -89,6 +109,25 @@ def tile_defaults(op: str, platform: Optional[str] = None) -> dict:
     plat = probe.platform() if platform is None else platform
     table = _TILE_TABLE.get(plat, _TILE_TABLE[None])
     return dict(table.get(op, {}))
+
+
+def backtransform_group(n: int, b: int, platform: Optional[str] = None) -> int:
+    """Back-transform WY group size G for an n x n problem at bandwidth b.
+
+    Table value clamped to [1, K] with K the per-sweep reflector count —
+    groups wider than a whole sweep buy nothing.
+    """
+    rows = _BT_GROUP_TABLE.get(_platform_key(platform), _BT_GROUP_TABLE[None])
+    g = DEFAULT_BT_GROUP
+    for bound, val in rows:
+        if bound is None or n < bound:
+            g = val
+            break
+    # Deferred import: repro.core pulls in repro.solver at package scope.
+    from repro.core.backtransform import _sweep_shape
+
+    _, K = _sweep_shape(n, b)
+    return max(1, min(int(g), K))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -166,7 +166,8 @@ class BatchPlan:
             )
         self._check_operand(A)
         fn = _execute_batch_inv_donated if donate else _execute_batch_inv
-        return fn(A, jnp.asarray(eps, jnp.float32), bpl=self, p=p)
+        # Ridge in the operand dtype (see EvdPlan.inverse_pth_root).
+        return fn(A, jnp.asarray(eps, self.dtype), bpl=self, p=p)
 
     def describe(self) -> str:
         return (

@@ -21,6 +21,7 @@ __all__ = ["Spectrum", "EvdConfig", "full_spectrum", "by_index", "by_count"]
 
 METHODS = ("two_stage", "direct", "jacobi")
 CHASES = ("wavefront", "sequential")
+BACKTRANSFORMS = ("blocked", "scan")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +93,11 @@ class EvdConfig:
     * ``method``  — ``two_stage`` (the paper), ``direct`` (one-stage
       Householder baseline), ``jacobi`` (dense parallel Jacobi).
     * ``chase``   — bulge-chase schedule: ``wavefront`` | ``sequential``.
+    * ``backtransform`` — eigenvector back-transform path: ``blocked``
+      (default; compact-WY GEMM aggregation of Q1 and Q2 — see
+      ``repro.core.backtransform``) | ``scan`` (the per-reflector appliers,
+      kept as the numerical/ordering oracle).  Two-stage only; the direct
+      and Jacobi methods ignore it.
     * ``b, nb``   — bandwidth / update block.  ``None`` = resolved from the
       per-platform autotuning table at plan time (repro.solver.autotune).
     * ``backend`` — kernel-registry backend pin (``pallas`` | ``jnp`` | a
@@ -104,6 +110,7 @@ class EvdConfig:
 
     method: str = "two_stage"
     chase: str = "wavefront"
+    backtransform: str = "blocked"
     b: Optional[int] = None
     nb: Optional[int] = None
     backend: Optional[str] = None
@@ -116,6 +123,11 @@ class EvdConfig:
             raise ValueError(f"unknown method {self.method!r}; expected one of {METHODS}")
         if self.chase not in CHASES:
             raise ValueError(f"unknown chase {self.chase!r}; expected one of {CHASES}")
+        if self.backtransform not in BACKTRANSFORMS:
+            raise ValueError(
+                f"unknown backtransform {self.backtransform!r}; expected one "
+                f"of {BACKTRANSFORMS}"
+            )
         if self.b is not None and self.b < 1:
             raise ValueError(f"b must be >= 1, got {self.b}")
         if self.nb is not None and self.nb < 1:

@@ -99,7 +99,8 @@ def _roots_from_window(w, V, p: int, eps: float):
     """(V root(w) V^T) per matrix from the real eigenpair window — the same
     ridge/root formula as ``EvdPlan.inverse_pth_root``."""
     wmax = jnp.maximum(jnp.max(w, axis=-1), 0.0)
-    ridge = jnp.asarray(eps, jnp.float32) * jnp.maximum(wmax, 1e-30)
+    # Ridge in the operand dtype (see EvdPlan.inverse_pth_root).
+    ridge = jnp.asarray(eps, w.dtype) * jnp.maximum(wmax, 1e-30)
     w_safe = jnp.maximum(w, 0.0) + ridge[:, None]
     root = jnp.power(w_safe, -1.0 / p)
     return jnp.einsum("bik,bk,bjk->bij", V, root, V)

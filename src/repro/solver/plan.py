@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.backend import probe, registry
 
-from .autotune import resolve_blocking
+from .autotune import backtransform_group, resolve_blocking
 from .config import EvdConfig, Spectrum
 
 __all__ = [
@@ -56,12 +56,15 @@ class _Deps:
 
     def __getattr__(self, name):
         if _Deps._mod is None:
+            from repro.core import backtransform as bt
             from repro.core import band_reduction, bulge_chasing, direct_tridiag
             from repro.core import jacobi, tridiag_eig
 
             class _M:
                 band_reduce = staticmethod(band_reduction.band_reduce)
                 apply_q_left = staticmethod(band_reduction.apply_q_left)
+                apply_q_left_blocked = staticmethod(bt.apply_q_left_blocked)
+                apply_q2_blocked = staticmethod(bt.apply_q2_blocked)
                 band_to_tridiag = staticmethod(bulge_chasing.band_to_tridiag)
                 apply_q2 = staticmethod(bulge_chasing.apply_q2)
                 extract_tridiag = staticmethod(bulge_chasing.extract_tridiag)
@@ -81,7 +84,9 @@ _deps = _Deps()
 
 
 # ------------------------------------------------------------------ pipeline
-def _tridiag_pipeline(A, *, b, nb, method, chase, return_reflectors=False):
+def _tridiag_pipeline(
+    A, *, b, nb, method, chase, return_reflectors=False, merge_reflectors=False
+):
     """Reduce symmetric A to tridiagonal (d, e) via the requested pipeline."""
     if method == "direct":
         T, refl = _deps.direct_tridiagonalize(A, return_reflectors=True)
@@ -97,18 +102,32 @@ def _tridiag_pipeline(A, *, b, nb, method, chase, return_reflectors=False):
         T = _deps.band_to_tridiag(Bband, b, method=chase)
         return _deps.extract_tridiag(T)
 
-    Bband, refl1 = _deps.band_reduce(A, b, nb, return_reflectors=True)
+    Bband, refl1 = _deps.band_reduce(
+        A, b, nb, return_reflectors=True, merge_ts=merge_reflectors
+    )
     T, log2 = _deps.band_to_tridiag(Bband, b, method=chase, return_log=True)
     d, e = _deps.extract_tridiag(T)
     return d, e, ("two_stage", (refl1, log2))
 
 
-def _backtransform(kind_refl, X: jax.Array) -> jax.Array:
-    """x_A = Q x_T where Q is the accumulated tridiagonalization transform."""
+def _backtransform(
+    kind_refl, X: jax.Array, *, mode: str = "scan", group: int = 0
+) -> jax.Array:
+    """x_A = Q x_T where Q is the accumulated tridiagonalization transform.
+
+    ``mode`` selects the eigenvector back-transform path: ``blocked`` runs
+    the compact-WY GEMM subsystem (``repro.core.backtransform`` — Q2 through
+    the registry ``backtransform_wy`` op with WY group size ``group``, Q1
+    through the per-block T-merged appliers); ``scan`` runs the per-reflector
+    oracle appliers.
+    """
     kind, refl = kind_refl
     if kind == "direct":
         return _deps.apply_q_direct(refl, X, transpose=False)
     refl1, log2 = refl
+    if mode == "blocked":
+        X = _deps.apply_q2_blocked(log2, X, transpose=False, group=group or None)
+        return _deps.apply_q_left_blocked(refl1, X, transpose=False)
     X = _deps.apply_q2(log2, X, transpose=False)        # Q2 @ X
     return _deps.apply_q_left(refl1, X, transpose=False)  # Q1 @ (Q2 @ X)
 
@@ -162,6 +181,8 @@ class EvdPlan:
     backend: str                     # resolved kernel backend
     platform: str
     fallback_reason: Optional[str] = None
+    bt_group: int = 0                # blocked back-transform WY group size G
+                                     # (0: back-transform not applicable)
 
     # ---- derived views ----------------------------------------------------
     @property
@@ -210,13 +231,18 @@ class EvdPlan:
                 f"{self.config.spectrum}"
             )
         self._check_operand(A)
-        return _inverse_pth_root(A, jnp.asarray(eps, jnp.float32), pl=self, p=p)
+        # Ridge in the operand dtype: a float32 eps would silently promote /
+        # downcast mid-pipeline for float64 plans.
+        return _inverse_pth_root(A, jnp.asarray(eps, self.dtype), pl=self, p=p)
 
     def describe(self) -> str:
         parts = [
             f"EvdPlan(n={self.n}, {self.dtype}, method={self.method}, "
             f"b={self.b}, nb={self.nb}, backend={self.backend}, "
-            f"platform={self.platform}, k={self.k}/{self.n})"
+            f"platform={self.platform}, k={self.k}/{self.n}, "
+            f"backtransform={self.config.backtransform}"
+            + (f"[G={self.bt_group}]" if self.bt_group else "")
+            + ")"
         ]
         if self.fallback_reason:
             parts.append(f"  fallback: {self.fallback_reason}")
@@ -259,6 +285,9 @@ def plan(n: int, dtype, config: EvdConfig = EvdConfig()) -> EvdPlan:
         b, nb, reason = dec.b, dec.nb, dec.fallback_reason
     else:
         b, nb, reason = 0, 0, None
+    bt_group = 0
+    if config.method == "two_stage" and b > 1 and config.backtransform == "blocked":
+        bt_group = backtransform_group(n, b, platform)
 
     pl = EvdPlan(
         n=n,
@@ -270,6 +299,7 @@ def plan(n: int, dtype, config: EvdConfig = EvdConfig()) -> EvdPlan:
         backend=backend,
         platform=platform,
         fallback_reason=reason,
+        bt_group=bt_group,
     )
     _PLAN_CACHE[key] = pl
     return pl
@@ -328,17 +358,19 @@ def _execute(A: jax.Array, *, pl: EvdPlan, eigenvectors: bool):
                 d, e, start=start, count=count, max_iter=pl.bisect_iters
             )
 
+        mode = pl.config.backtransform if pl.method == "two_stage" else "scan"
         d, e, refl = _tridiag_pipeline(
             A, b=pl.b, nb=pl.nb, method=pl.method, chase=pl.config.chase,
-            return_reflectors=True,
+            return_reflectors=True, merge_reflectors=mode == "blocked",
         )
         w = _deps.eigvalsh_tridiag_range(
             d, e, start=start, count=count, max_iter=pl.bisect_iters
         )
         # Partial spectrum: inverse iteration runs ONE lane per selected
-        # eigenvalue — the eigenvector phase costs O(k), not O(n).
+        # eigenvalue — the eigenvector phase (inverse iteration AND the
+        # back-transform, whose panels are (rows, k)) costs O(k), not O(n).
         VT = _deps.eigvecs_inverse_iteration(d, e, w)
-        V = _backtransform(refl, VT)
+        V = _backtransform(refl, VT, mode=mode, group=pl.bt_group)
         return w, V
 
 
