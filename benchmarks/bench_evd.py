@@ -14,6 +14,21 @@ with a ``stage=`` record field, with the back-transform measured on BOTH
 paths (``path="blocked"`` — the compact-WY GEMM default — and
 ``path="scan"`` — the per-reflector oracle), so the BENCH trajectory shows
 where the eigenvector phase's time goes and what blocking buys.
+
+The tridiagonalization stage gets the same treatment twice over:
+
+* ``stage="tridiag"`` is measured on BOTH first-stage generations
+  (``path="fused"`` — the fused panel+trailing op and grouped-wavefront
+  chase, the default — and ``path="unfused"`` — the legacy panel_qr +
+  syr2k composition and scatter-write chase, kept as the oracle), the
+  fused row carrying ``speedup_vs_unfused=``.
+* its interior is split into ``stage="panel_qr"`` / ``"trailing_update"``
+  / ``"bulge_chase"`` sub-stage records.  The bulge chase is timed
+  directly; the panel and trailing sub-stages are timed as shape-faithful
+  proxies — the registry ops run standalone at exactly the
+  :class:`~repro.core.band_reduction.StageSchedule` shapes the band
+  reduction issues (cost is shape-determined, but without the data
+  dependence they cannot be cut out of the real pipeline).
 """
 from __future__ import annotations
 
@@ -33,21 +48,91 @@ from repro.core import (
     extract_tridiag,
     jacobi_eigh,
 )
+from repro.backend import registry
+from repro.core.band_reduction import build_stage_schedule
+from repro.core.panel_qr import panel_qr_geqrf
 from repro.solver import EvdConfig, by_count, plan, solve_many
 from repro.solver.autotune import backtransform_group
 from benchmarks.common import bench, emit, is_smoke
+
+
+def _tridiag_substages(A, Bband, n: int, b: int, nb: int, common: dict):
+    """Split the tridiag stage: panel_qr / trailing_update / bulge_chase.
+
+    The bulge chase runs standalone on the real banded matrix.  The panel
+    and trailing phases are data-dependent inside the band reduction, so
+    they are timed as shape-faithful proxies: the same registry ops, at
+    exactly the StageSchedule shapes band_reduce issues, on slices of A.
+    """
+    sched = build_stage_schedule(n, b, nb)
+    trailing = registry.resolve("trailing_update")
+
+    @jax.jit
+    def panels_only(A):
+        acc = jnp.zeros((), A.dtype)
+        for entry in sched.entries:
+            for j in range(entry.q):
+                c0 = entry.ci + j * b
+                P = A[c0 + b :, c0 : c0 + b]
+                V, T, _taus, _R = panel_qr_geqrf(P)
+                acc = acc + V[0, 0] + T[0, 0]
+        return acc
+
+    @jax.jit
+    def trailing_only(A):
+        acc = jnp.zeros((), A.dtype)
+        for entry in sched.entries:
+            c1 = entry.ci + entry.w
+            C = A[c1:, c1:]
+            Y = A[c1:, entry.ci : c1]
+            acc = acc + trailing(C, Y, Y)[0, 0]
+        return acc
+
+    @jax.jit
+    def chase_only(Bband):
+        return band_to_tridiag(Bband, b, return_log=True)
+
+    t_panel = bench(panels_only, A)
+    t_trail = bench(trailing_only, A)
+    t_chase = bench(chase_only, Bband)
+
+    emit(
+        f"evd_stage_panel_qr_n{n}", t_panel, "shape_proxy",
+        stage="panel_qr", **common,
+    )
+    emit(
+        f"evd_stage_trailing_update_n{n}", t_trail, "shape_proxy",
+        stage="trailing_update", **common,
+    )
+    emit(
+        f"evd_stage_bulge_chase_n{n}", t_chase, "",
+        stage="bulge_chase", **common,
+    )
 
 
 def _stage_breakdown(A, n: int, b: int, nb: int, backend: str):
     """Time each EVD pipeline stage in isolation (full spectrum)."""
     group = backtransform_group(n, b)
 
+    def tridiag_fn(mode):
+        @jax.jit
+        def f(A):
+            Bband, refl1 = band_reduce(
+                A, b, nb, return_reflectors=True, merge_ts=True, mode=mode
+            )
+            T, log2 = band_to_tridiag(Bband, b, return_log=True, mode=mode)
+            d, e = extract_tridiag(T)
+            return d, e, refl1, log2
+
+        return f
+
+    tridiag = tridiag_fn(None)  # the process default (fused unless pinned)
+    tri_fused = tridiag_fn("fused")
+    tri_unfused = tridiag_fn("unfused")
+
     @jax.jit
-    def tridiag(A):
-        Bband, refl1 = band_reduce(A, b, nb, return_reflectors=True, merge_ts=True)
-        T, log2 = band_to_tridiag(Bband, b, return_log=True)
-        d, e = extract_tridiag(T)
-        return d, e, refl1, log2
+    def band_only(A):
+        return band_reduce(A, b, nb)
 
     @jax.jit
     def bisect(d, e):
@@ -71,14 +156,35 @@ def _stage_breakdown(A, n: int, b: int, nb: int, backend: str):
     err = np.abs(np.asarray(Vb) - np.asarray(Vs)).max()
     assert err < 1e-4, f"blocked-vs-scan back-transform diverged: {err}"
 
-    t_tri = bench(tridiag, A)
+    # fused-vs-unfused first stage must agree on the tridiagonal it produces
+    # (bitwise on the jnp backend; kernel-rounding-close on pallas).
+    d_f, e_f, _, _ = tri_fused(A)
+    d_u, e_u, _, _ = tri_unfused(A)
+    scale = max(float(np.abs(np.asarray(d_u)).max()), 1.0)
+    err_tri = max(
+        np.abs(np.asarray(d_f) - np.asarray(d_u)).max(),
+        np.abs(np.asarray(e_f) - np.asarray(e_u)).max(),
+    )
+    assert err_tri < 5e-3 * scale, f"fused-vs-unfused tridiag diverged: {err_tri}"
+
+    t_tri_fused = bench(tri_fused, A)
+    t_tri_unfused = bench(tri_unfused, A)
     t_bis = bench(bisect, d, e)
     t_inv = bench(invit, d, e, w)
     t_bt_blocked = bench(bt_blocked, refl1, log2, VT)
     t_bt_scan = bench(bt_scan, refl1, log2, VT)
 
     common = dict(op="evd_stage", n=n, backend=backend)
-    emit(f"evd_stage_tridiag_n{n}", t_tri, "", stage="tridiag", **common)
+    emit(
+        f"evd_stage_tridiag_fused_n{n}", t_tri_fused,
+        f"speedup_vs_unfused={t_tri_unfused / t_tri_fused:.2f}",
+        stage="tridiag", path="fused", **common,
+    )
+    emit(
+        f"evd_stage_tridiag_unfused_n{n}", t_tri_unfused, "",
+        stage="tridiag", path="unfused", **common,
+    )
+    _tridiag_substages(A, band_only(A), n, b, nb, common)
     emit(f"evd_stage_bisection_n{n}", t_bis, "", stage="bisection", **common)
     emit(
         f"evd_stage_inverse_iteration_n{n}", t_inv, "",

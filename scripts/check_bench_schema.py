@@ -10,11 +10,14 @@ emits a row without them (``emit(..., op=None)``) silently drops out of
 the trajectory; this gate turns that into a red build instead.
 
 The EVD suite additionally owes the per-stage breakdown: ``BENCH_evd.json``
-must carry one record per pipeline stage (``stage=`` field — tridiag,
-bisection, inverse_iteration, backtransform) and the back-transform stage
-on BOTH paths (``path="blocked"`` and ``path="scan"``), so the trajectory
-always shows where the eigenvector phase's time goes and what the blocked
-compact-WY path buys over the scan oracle.
+must carry one record per pipeline stage (``stage=`` field — tridiag plus
+its panel_qr / trailing_update / bulge_chase sub-stages, bisection,
+inverse_iteration, backtransform), the back-transform stage on BOTH paths
+(``path="blocked"`` and ``path="scan"``), and the tridiag stage on BOTH
+first-stage generations (``path="fused"`` — the fused panel+trailing op
+and wavefront chase — and ``path="unfused"`` — the legacy composition
+oracle), so the trajectory always shows where the time goes and what the
+fused/blocked paths buy over their oracles.
 
 Exit status: 0 when every record passes, 1 with a per-record report when
 any field is missing/empty, 2 when no BENCH files were found at all (a
@@ -30,8 +33,17 @@ import sys
 REQUIRED = ("op", "n", "dtype", "backend", "median_ms")
 
 # suite-name prefix -> required per-suite structure.
-EVD_REQUIRED_STAGES = ("tridiag", "bisection", "inverse_iteration", "backtransform")
+EVD_REQUIRED_STAGES = (
+    "tridiag",
+    "panel_qr",
+    "trailing_update",
+    "bulge_chase",
+    "bisection",
+    "inverse_iteration",
+    "backtransform",
+)
 EVD_REQUIRED_BT_PATHS = ("blocked", "scan")
+EVD_REQUIRED_TRIDIAG_PATHS = ("fused", "unfused")
 
 
 def bench_files(paths):
@@ -80,6 +92,10 @@ def check_evd_stages(path, records):
             problems.append(
                 f"{path}: backtransform stage missing path={p} record"
             )
+    tri_paths = {r.get("path") for r in records if r.get("stage") == "tridiag"}
+    for p in EVD_REQUIRED_TRIDIAG_PATHS:
+        if p not in tri_paths:
+            problems.append(f"{path}: tridiag stage missing path={p} record")
     return problems
 
 

@@ -42,7 +42,15 @@ from repro.backend import registry
 
 from .panel_qr import panel_qr_geqrf, panel_qr_householder
 
-__all__ = ["band_reduce", "BandReflectors", "apply_q_left", "form_q"]
+__all__ = [
+    "band_reduce",
+    "BandReflectors",
+    "StageEntry",
+    "StageSchedule",
+    "build_stage_schedule",
+    "apply_q_left",
+    "form_q",
+]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -80,6 +88,73 @@ class BandReflectors:
         V, T, Tm = children
         b, blocks = aux
         return cls(V=V, T=T, b=b, blocks=blocks, Tm=Tm)
+
+
+@dataclasses.dataclass(frozen=True)
+class StageEntry:
+    """One block step of the first stage (static shapes — jit-safe).
+
+    ``ci``: start column of the block in full-matrix coordinates; ``m``: side
+    of the trailing view the block operates on; ``w``: columns factored by
+    the block (= q·b); ``panel0``/``q``: the block's panel range in the
+    global panel numbering (matches ``BandReflectors.blocks``).
+    """
+
+    ci: int
+    m: int
+    w: int
+    panel0: int
+    q: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSchedule:
+    """The static first-stage schedule: panel/block index -> fused-op call.
+
+    Invariants (relied on by the back-transform and pinned by tests):
+
+    * entries are in execution order with ``ci`` strictly increasing by
+      ``w``; the final entry leaves a trailing view of side <= ``b`` + last
+      ``w`` (the loop stops when ``m <= b``).
+    * ``panel0``/``q`` tile the global panel numbering contiguously —
+      ``entries[g].panel0 == sum(q of entries[:g])`` — so
+      ``BandReflectors.blocks == ((e.panel0, e.q) for e in entries)``
+      regardless of which executor (fused kernel, fused jnp, unfused
+      composition) runs the entries.
+    * every ``w`` is a multiple of ``b`` and ``b <= m - w``, the
+      preconditions of both the fused kernel and ``_reduce_block``.
+
+    The schedule depends only on (n, b, nb) — never on values — so it is
+    built once per plan and baked into the traced program.
+    """
+
+    n: int
+    b: int
+    nb: int
+    entries: Tuple[StageEntry, ...]
+
+    @property
+    def num_panels(self) -> int:
+        return sum(e.q for e in self.entries)
+
+    @property
+    def blocks(self) -> Tuple[Tuple[int, int], ...]:
+        return tuple((e.panel0, e.q) for e in self.entries)
+
+
+def build_stage_schedule(n: int, b: int, nb: int) -> StageSchedule:
+    """The static block schedule of ``band_reduce`` for sizes (n, b, nb)."""
+    entries = []
+    ci = 0
+    p = 0
+    while n - ci > b:
+        m = n - ci
+        w = min(nb, m - b)
+        q = w // b
+        entries.append(StageEntry(ci=ci, m=m, w=w, panel0=p, q=q))
+        p += q
+        ci += w
+    return StageSchedule(n=n, b=b, nb=nb, entries=tuple(entries))
 
 
 def _reduce_block(
@@ -154,6 +229,7 @@ def band_reduce(
     syr2k_update: Optional[Callable] = None,
     return_reflectors: bool = False,
     merge_ts: bool = False,
+    mode: Optional[str] = None,
 ):
     """Reduce a symmetric matrix to band form with bandwidth ``b``.
 
@@ -172,6 +248,15 @@ def band_reduce(
         per-panel T factors into one (q·b, q·b) block-reflector T (stored as
         ``BandReflectors.Tm``) so the blocked back-transform applies rank-q·b
         GEMMs instead of per-panel rank-b updates.
+      mode: "fused" | "unfused" | None (default: the process-wide
+        ``registry.default_tridiag()``).  "fused" executes each
+        :class:`StageSchedule` entry as ONE ``fused_panel_update`` registry
+        op (panel QRs + trailing update in a single kernel, factors
+        VMEM-resident); "unfused" is the legacy panel_qr + syr2k
+        composition, kept as the oracle.  Injecting ``syr2k_update`` or a
+        non-default ``panel_method`` implies the unfused composition (the
+        fused op owns both phases); requesting ``mode="fused"`` alongside
+        them is an error.
 
     Returns:
       ``Bband`` (n, n) symmetric banded, and optionally reflectors.
@@ -183,16 +268,30 @@ def band_reduce(
     if nb % b != 0:
         raise ValueError(f"nb={nb} must be a multiple of b={b}")
 
-    if syr2k_update is None:
-        syr2k_update = registry.resolve("trailing_update")
-    if panel_method == "geqrf":
-        panel_qr_fn = panel_qr_geqrf
-    elif panel_method == "householder":
-        panel_qr_fn = panel_qr_householder
-    elif panel_method == "pallas":
-        panel_qr_fn = registry.resolve("panel_qr", "pallas")
+    custom_phases = syr2k_update is not None or panel_method != "geqrf"
+    if mode is None:
+        mode = "unfused" if custom_phases else registry.default_tridiag()
+    if mode not in ("fused", "unfused"):
+        raise ValueError(f"unknown band-reduction mode: {mode!r}")
+    if mode == "fused" and custom_phases:
+        raise ValueError(
+            "mode='fused' executes panel QR and the trailing update as one "
+            "op; syr2k_update/panel_method injection requires mode='unfused'"
+        )
+
+    if mode == "fused":
+        fused_update = registry.resolve("fused_panel_update")
     else:
-        raise ValueError(f"unknown panel_method: {panel_method!r}")
+        if syr2k_update is None:
+            syr2k_update = registry.resolve("trailing_update")
+        if panel_method == "geqrf":
+            panel_qr_fn = panel_qr_geqrf
+        elif panel_method == "householder":
+            panel_qr_fn = panel_qr_householder
+        elif panel_method == "pallas":
+            panel_qr_fn = registry.resolve("panel_qr", "pallas")
+        else:
+            raise ValueError(f"unknown panel_method: {panel_method!r}")
 
     dtype = A.dtype
     B = A
@@ -200,25 +299,21 @@ def band_reduce(
     Vall = jnp.zeros((n, max_panels * b), dtype)
     Tall = jnp.zeros((max_panels, b, b), dtype)
 
-    ci = 0
-    p = 0  # global panel counter
-    blocks = []
-    while n - ci > b:
-        m = n - ci
-        w = min(nb, m - b)
-        view = B[ci:, ci:]
-        new_view, Vbuf, Ts = _reduce_block(view, b, w, panel_qr_fn, syr2k_update)
-        B = B.at[ci:, ci:].set(new_view)
-        q = w // b
-        Vall = Vall.at[ci:, p * b : (p + q) * b].set(Vbuf)
-        Tall = Tall.at[p : p + q].set(Ts)
-        blocks.append((p, q))
-        p += q
-        ci += w
+    schedule = build_stage_schedule(n, b, nb)
+    for e in schedule.entries:
+        view = B[e.ci :, e.ci :]
+        if mode == "fused":
+            new_view, Vbuf, Ts = fused_update(view, b, e.w)
+        else:
+            new_view, Vbuf, Ts = _reduce_block(view, b, e.w, panel_qr_fn, syr2k_update)
+        B = B.at[e.ci :, e.ci :].set(new_view)
+        Vall = Vall.at[e.ci :, e.panel0 * b : (e.panel0 + e.q) * b].set(Vbuf)
+        Tall = Tall.at[e.panel0 : e.panel0 + e.q].set(Ts)
+    p = schedule.num_panels
 
     if return_reflectors:
         refl = BandReflectors(
-            V=Vall[:, : p * b], T=Tall[:p], b=b, blocks=tuple(blocks)
+            V=Vall[:, : p * b], T=Tall[:p], b=b, blocks=schedule.blocks
         )
         if merge_ts:
             from .backtransform import merge_band_reflectors

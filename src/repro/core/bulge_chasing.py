@@ -53,6 +53,7 @@ __all__ = [
     "ChaseLog",
     "chase_sequential",
     "chase_wavefront",
+    "chase_wavefront_slices",
     "band_to_tridiag",
     "apply_q2",
     "extract_tridiag",
@@ -227,29 +228,91 @@ def chase_wavefront(B: jax.Array, b: int, return_log: bool = False):
     return (out, log) if return_log else out
 
 
+def chase_wavefront_slices(B: jax.Array, b: int, return_log: bool = False):
+    """The fused-mode XLA wavefront executor: slice write-back.
+
+    Identical to :func:`chase_wavefront` — same vmapped window gather, same
+    vmapped window op, so the compiled per-window arithmetic is the SAME XLA
+    subgraph and the results are bitwise equal — except the scatter
+    write-back ``Bp.at[rows, rows].set(Wn)`` (an advanced-index scatter XLA
+    lowers to a gather/scatter pair that dominates the whole tridiagonal
+    stage off-TPU) is replaced by a fori loop of ``dynamic_update_slice``
+    writes.  Windows within a wavefront are disjoint, so the sequential
+    write-back commutes and the loop carries no cross-slot dependence.
+    """
+    n = B.shape[0]
+    if n < 3 or b <= 1:
+        return chase_sequential(B, b, return_log)
+
+    kmax = jnp.asarray(_kmax_table(n, b))
+    A = max_active_sweeps(n, b)
+    W_total = num_wavefronts(n, b)
+    off, scratch0, _ = _pad_sizes(n, b)
+    w3 = 3 * b
+
+    Bp = _embed(B, b)
+    slot = jnp.arange(A, dtype=jnp.int32)
+
+    def body(Bp, w):
+        s = w // 3 - slot
+        k = w - 3 * s
+        s_safe = jnp.clip(s, 0, n - 3)
+        active = (s >= 0) & (s <= n - 3) & (k >= 0) & (k <= kmax[s_safe])
+        r0 = jnp.where(active, off + s + 1 + (k - 1) * b, scratch0)
+        Ws = jax.vmap(lambda r: lax.dynamic_slice(Bp, (r, r), (w3, w3)))(r0)
+        Wn, vs, taus = jax.vmap(lambda Wi, ki: _window_op(Wi, ki, b))(Ws, k)
+        Bp = lax.fori_loop(
+            0,
+            A,
+            lambda a, Bc: lax.dynamic_update_slice(Bc, Wn[a], (r0[a], r0[a])),
+            Bp,
+        )
+        row0 = jnp.where(active, s + 1 + k * b, n).astype(jnp.int32)
+        return Bp, (vs, taus, row0)
+
+    Bp, (vs, taus, row0) = lax.scan(body, Bp, jnp.arange(W_total, dtype=jnp.int32))
+    out = lax.dynamic_slice(Bp, (off, off), (n, n))
+    log = ChaseLog(vs=vs, taus=taus, row0=row0, n=n, b=b)
+    return (out, log) if return_log else out
+
+
 def band_to_tridiag(
     B: jax.Array,
     b: int,
     *,
     method: str = "wavefront",
     return_log: bool = False,
+    mode: Optional[str] = None,
 ):
     """Reduce a symmetric band matrix (dense storage) to tridiagonal form.
 
-    The values-only wavefront path (``return_log=False``) dispatches through
-    ``repro.backend.registry`` so the VMEM-resident Pallas kernel is the
-    default; the eigenvector path needs the reflector log, which only the
-    XLA executors emit.
-    """
-    if method == "wavefront":
-        if not return_log:
-            from repro.backend import registry
+    ``mode`` selects the first-stage pipeline generation (default: the
+    process-wide ``repro.backend.registry.default_tridiag()``, i.e. the
+    ``REPRO_TRIDIAG`` env var or ``"fused"``):
 
-            return registry.resolve("bulge_chase")(B, b)
-        return chase_wavefront(B, b, return_log)
+    * ``"fused"``   — the ``bulge_wavefront`` registry op: the grouped
+      wavefront kernel (or its slice-write XLA executor off-TPU), which
+      emits the reflector log directly, so eigenvector runs stay on the
+      fast path too.
+    * ``"unfused"`` — the legacy composition kept as the oracle: the
+      values-only ``bulge_chase`` registry op, scatter-write
+      ``chase_wavefront`` when a log is needed.
+    """
     if method == "sequential":
         return chase_sequential(B, b, return_log)
-    raise ValueError(f"unknown bulge chasing method: {method}")
+    if method != "wavefront":
+        raise ValueError(f"unknown bulge chasing method: {method}")
+    from repro.backend import registry
+
+    if mode is None:
+        mode = registry.default_tridiag()
+    if mode == "fused":
+        return registry.resolve("bulge_wavefront")(B, b, return_log=return_log)
+    if mode != "unfused":
+        raise ValueError(f"unknown tridiag mode: {mode}")
+    if not return_log:
+        return registry.resolve("bulge_chase")(B, b)
+    return chase_wavefront(B, b, return_log)
 
 
 def extract_tridiag(T: jax.Array) -> tuple[jax.Array, jax.Array]:

@@ -6,22 +6,29 @@ the ENTIRE padded matrix in VMEM (the working set of bulge chasing is the
 band — small by construction: the paper's whole point is b ≪ n) and walks
 the static wavefront schedule as the Pallas grid:
 
-* grid = (num_wavefronts,)  — sequential ("arbitrary") dimension; the output
-  block index is constant, so the matrix stays resident in VMEM across all
+* grid = (num_wavefronts, num_cells) — both sequential ("arbitrary"); the
+  matrix block index is constant, so it stays resident in VMEM across all
   wavefronts and is written back to HBM once at the end.  This is the
   paper's "hide the data movement" taken to its limit: one load, one store.
-* within a grid step, a fori loop over the active sweep slots applies each
-  3b x 3b two-sided Householder window update in place (dynamic VMEM
-  slices).  Masked slots are routed to a zero scratch corner and degenerate
-  to tau = 0 no-ops, so the schedule needs no branches.
+* each grid cell chases a GROUP of G independent bulges of the wavefront:
+  the cells of a wavefront tile its ``A = max_active_sweeps`` slots, and
+  each slot applies one 3b x 3b two-sided Householder window update in
+  place (dynamic VMEM slices).  Window disjointness within a wavefront —
+  the same invariant that makes the XLA executor's batched update race-free
+  — makes the cell order irrelevant.  Masked slots are routed to a zero
+  scratch corner and degenerate to tau = 0 no-ops, so the schedule needs no
+  branches.
+* unlike the original one-bulge-at-a-time kernel, each cell can also EMIT
+  the reflector log (v, tau, row0) for its slots as streamed output blocks,
+  laid out exactly like ``chase_wavefront``'s (W, A, b) sweep-major log —
+  so the eigenvector path (``apply_q2`` and the PR 4 Q2 regroup) consumes
+  kernel logs unchanged.
 
 VMEM budget: (n + 6b)^2 * 4 bytes — n <= ~1500 fp32 on a 16 MB VMEM core,
 which covers the Shampoo preconditioner blocks this framework runs the
-solver on (<= 1024).  Larger matrices fall back to the XLA wavefront
-executor in ``repro.core.bulge_chasing`` (HBM-resident).
-
-Eigenvector logs are not emitted by the kernel (values-only fast path); the
-eigenvector path uses the XLA executor.
+solver on (<= 1024).  The ceilings live in ``repro.kernels.limits``
+(``BULGE_VMEM_MAX_N`` / ``BULGE_INTERPRET_MAX_N``); above them the ops
+wrapper falls back to the XLA wavefront executor (HBM-resident).
 """
 from __future__ import annotations
 
@@ -35,7 +42,7 @@ from jax.experimental import pallas as pl
 from repro.backend.compat import tpu_compiler_params, ARBITRARY
 from repro.core.bulge_chasing import _pad_sizes, num_wavefronts, max_active_sweeps
 
-__all__ = ["bulge_chase_pallas"]
+__all__ = ["bulge_wavefront_pallas", "bulge_chase_pallas"]
 
 
 def _window_update(W: jax.Array, is_first, b: int):
@@ -43,6 +50,8 @@ def _window_update(W: jax.Array, is_first, b: int):
 
     The eliminated column is local ``b-1`` for sweep-start ops and ``0`` for
     chase ops — selected, not indexed, so no dynamic gather is needed.
+    Returns ``(Wn, v, tau)`` with the reflector in the conventions of
+    ``repro.core.bulge_chasing._window_op`` (v[0] = 1, zero-padded tail).
     """
     w3 = 3 * b
     dtype = W.dtype
@@ -77,61 +86,113 @@ def _window_update(W: jax.Array, is_first, b: int):
     m2 = in_rows[:, None] & col_mask[None, :]
     Wn = jnp.where(m2, exact[:, None], Wn)
     Wn = jnp.where(m2.T, exact[None, :], Wn)
-    return Wn
+    return Wn, u[b : 2 * b], tau
 
 
-def _bulge_kernel(bin_ref, bout_ref, *, n: int, b: int, A: int, off: int, scratch0: int):
+def _bulge_kernel(
+    bin_ref,
+    bout_ref,
+    *log_refs,
+    n: int,
+    b: int,
+    G: int,
+    off: int,
+    scratch0: int,
+):
     w = pl.program_id(0)
+    c = pl.program_id(1)
     w3 = 3 * b
 
-    @pl.when(w == 0)
+    @pl.when((w == 0) & (c == 0))
     def _copy_in():
         bout_ref[...] = bin_ref[...]
 
-    def slot_body(a, carry):
+    for g in range(G):  # static unroll over the cell's bulge group
+        a = c * G + g  # wavefront slot chased by this (cell, lane)
         s = w // 3 - a
         k = w - 3 * s
         kmax_s = (n - 3 - jnp.clip(s, 0, n - 3)) // b
         active = (s >= 0) & (s <= n - 3) & (k >= 0) & (k <= kmax_s)
         r0 = jnp.where(active, off + s + 1 + (k - 1) * b, scratch0)
         W = bout_ref[pl.ds(r0, w3), pl.ds(r0, w3)]
-        Wn = _window_update(W, k == 0, b)
+        Wn, v, tau = _window_update(W, k == 0, b)
         bout_ref[pl.ds(r0, w3), pl.ds(r0, w3)] = Wn
-        return carry
+        if log_refs:
+            vs_ref, taus_ref, row0_ref = log_refs
+            vs_ref[0, g, :] = v
+            taus_ref[0, g] = tau
+            row0_ref[0, g] = jnp.where(active, s + 1 + k * b, n).astype(jnp.int32)
 
-    lax.fori_loop(0, A, slot_body, 0)
 
-
-@functools.partial(jax.jit, static_argnames=("b", "interpret"))
-def bulge_chase_pallas(B: jax.Array, b: int, *, interpret: bool = False) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("b", "group", "return_log", "interpret"))
+def bulge_wavefront_pallas(
+    B: jax.Array,
+    b: int,
+    *,
+    group: int = 1,
+    return_log: bool = False,
+    interpret: bool = False,
+):
     """Band (dense storage, bandwidth b) -> tridiagonal, VMEM-resident.
 
-    Matches ``repro.core.chase_wavefront`` / ``chase_sequential`` bitwise up
-    to float rounding.  Values-only (no eigenvector log).
+    Matches ``repro.core.chase_wavefront`` up to float rounding; with
+    ``return_log=True`` also returns the raw sweep-major log arrays
+    ``(vs, taus, row0)`` shaped ``(W, S*group, b)`` / ``(W, S*group)`` —
+    slot-compatible with the XLA executor's ``(W, A, b)`` log (slots past
+    ``A`` are masked no-ops; the ops wrapper wraps them in a ``ChaseLog``).
+
+    ``group`` is the number of bulges chased per grid cell (autotuned
+    per-platform); the wavefront's ``A`` slots are tiled by
+    ``S = ceil(A / group)`` cells.
     """
     n = B.shape[0]
     if n < 3 or b <= 1:
+        if return_log:
+            raise ValueError("trivial chase emits no log; handle n < 3 in the caller")
         return B
     off, scratch0, total = _pad_sizes(n, b)
     A = max_active_sweeps(n, b)
     W_total = num_wavefronts(n, b)
+    G = max(1, min(int(group), A))
+    S = -(-A // G)
 
     Bp = jnp.zeros((total, total), B.dtype)
     Bp = lax.dynamic_update_slice(Bp, B, (off, off))
 
     kernel = functools.partial(
-        _bulge_kernel, n=n, b=b, A=A, off=off, scratch0=scratch0
+        _bulge_kernel, n=n, b=b, G=G, off=off, scratch0=scratch0
     )
-    out = pl.pallas_call(
+    out_shape = [jax.ShapeDtypeStruct((total, total), B.dtype)]
+    out_specs = [pl.BlockSpec((total, total), lambda w, c: (0, 0))]
+    if return_log:
+        out_shape += [
+            jax.ShapeDtypeStruct((W_total, S * G, b), B.dtype),
+            jax.ShapeDtypeStruct((W_total, S * G), B.dtype),
+            jax.ShapeDtypeStruct((W_total, S * G), jnp.int32),
+        ]
+        out_specs += [
+            pl.BlockSpec((1, G, b), lambda w, c: (w, c, 0)),
+            pl.BlockSpec((1, G), lambda w, c: (w, c)),
+            pl.BlockSpec((1, G), lambda w, c: (w, c)),
+        ]
+    res = pl.pallas_call(
         kernel,
-        grid=(W_total,),
-        in_specs=[pl.BlockSpec((total, total), lambda w: (0, 0))],
-        out_specs=pl.BlockSpec((total, total), lambda w: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((total, total), B.dtype),
+        grid=(W_total, S),
+        in_specs=[pl.BlockSpec((total, total), lambda w, c: (0, 0))],
+        out_specs=out_specs,
+        out_shape=out_shape,
         compiler_params=tpu_compiler_params(
-            dimension_semantics=(ARBITRARY,),
+            dimension_semantics=(ARBITRARY, ARBITRARY),
         ),
         interpret=interpret,
         name="bulge_chase_wavefront",
     )(Bp)
-    return lax.dynamic_slice(out, (off, off), (n, n))
+    out = lax.dynamic_slice(res[0], (off, off), (n, n))
+    if return_log:
+        return out, (res[1], res[2], res[3])
+    return out
+
+
+def bulge_chase_pallas(B: jax.Array, b: int, *, interpret: bool = False) -> jax.Array:
+    """Values-only alias kept for the original kernel's call sites."""
+    return bulge_wavefront_pallas(B, b, return_log=False, interpret=interpret)

@@ -1,0 +1,201 @@
+"""Pallas TPU kernel: FUSED panel factorization + two-sided trailing update.
+
+This is the paper's central move (§5.1/§5.2) taken to its structural limit:
+the first stage's per-block work — q = w/b compensated panel QRs, their
+compact-WY (V, T) factors, the Z = A·V·T intermediates, and the rank-2w
+two-sided SYR2K trailing update — executes as ONE kernel invocation, with
+the panel, V (the paper's W/Y), Z, and T factors VMEM-resident across the
+entire trailing sweep.  The unfused composition writes V/Z/T back to HBM
+after every panel and re-reads them for the trailing syr2k; here they are
+produced and consumed without ever leaving VMEM — the "convert memory-bound
+to compute-bound" conversion applied to the whole block step, not just the
+trailing GEMM.
+
+Structure (mirrors ``repro.kernels.syr2k`` for the trailing sweep):
+
+* grid = (T,) over the LOWER-TRIANGULAR trailing output tiles only, via the
+  same scalar-prefetched tile-index scheme as ``syr2k_lower_pallas``
+  (diagonal tiles are computed once, upper tiles are reconstructed by the
+  ops-layer symmetrization — half the FLOPs and output traffic).
+* grid step 0 runs the whole panel phase: the q-panel ``latrd``-style
+  compensated recurrence of ``repro.core.band_reduction._reduce_block``,
+  with each panel QR inlined via ``repro.kernels.panel.panel_qr_body``.
+  The factors land in resident output blocks (V, F, T — constant index
+  maps) and a VMEM scratch buffer (Z), where every later grid step reads
+  them back at zero HBM cost.
+* grid steps t >= 0 each compute one (bm, bm) trailing tile
+  ``C_ij - Z_i V_j^T - V_i Z_j^T`` as two MXU GEMMs with k = w.
+
+The grid dimension is sequential ("arbitrary"): step 0 must complete the
+panel phase before any tile consumes the factors, and the resident factor
+blocks persist across steps exactly like the syr2k accumulator tile.
+
+VMEM budget: (w + mt_pad)^2 + 3·(w + mt_pad)·w + bm^2 fp32 elements (the
+trailing view is resident because the panel recurrence needs full-height
+``A @ V`` products).  The ceiling lives in ``repro.kernels.limits``
+(``FUSED_PANEL_VMEM_MAX_ELEMS``); above it — or above the interpret-mode
+ceiling off-TPU — the ops wrapper falls back to the unfused
+panel_qr + syr2k composition, which streams and has no residency limit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.backend.compat import tpu_compiler_params, ARBITRARY
+
+from .panel import panel_qr_body
+from .syr2k import lower_tile_indices
+
+__all__ = ["fused_panel_update_pallas"]
+
+
+def _fused_kernel(
+    ti_ref, tj_ref, bv_ref, c_ref, v_ref, f_ref, t_ref, z_ref,
+    *, m: int, w: int, b: int, bm: int,
+):
+    t = pl.program_id(0)
+    dtype = bv_ref.dtype
+    q = w // b
+
+    @pl.when(t == 0)
+    def _panel_phase():
+        # The compensated q-panel recurrence of _reduce_block, on the
+        # VMEM-resident trailing view.  Static unroll over panels: the
+        # column recurrence is inherently sequential.
+        Bv = bv_ref[...]
+        rows2 = lax.broadcasted_iota(jnp.int32, (m, b), 0)
+        cols2 = lax.broadcasted_iota(jnp.int32, (m, b), 1)
+        Vbuf = jnp.zeros((m, w), dtype)
+        Zbuf = jnp.zeros((m, w), dtype)
+        F = jnp.zeros((m, w), dtype)
+        for jp in range(q):
+            c0 = jp * b
+            r0 = c0 + b  # elimination starts below this row
+            # --- compensated panel: P = (B - Z V^T - V Z^T)[:, c0:c0+b] ----
+            P = Bv[:, c0 : c0 + b]
+            if jp > 0:
+                P = (
+                    P
+                    - Zbuf[:, :c0] @ Vbuf[c0 : c0 + b, :c0].T
+                    - Vbuf[:, :c0] @ Zbuf[c0 : c0 + b, :c0].T
+                )
+            # --- panel QR of rows [r0, m), fully in VMEM -------------------
+            # LAPACK signs: the unfused oracle composition factors with
+            # panel_qr_geqrf, and parity needs matching reflector signs.
+            V_j, T_j, _taus, R_j = panel_qr_body(P[r0:, :], b, lapack_sign=True)
+            Vhat = lax.dynamic_update_slice(jnp.zeros((m, b), dtype), V_j, (r0, 0))
+            # --- exact final column values (band structure) ----------------
+            fcol = jnp.where(rows2 < r0, P, 0.0)
+            fcol = lax.dynamic_update_slice(fcol, R_j, (r0, 0))
+            in_band = rows2 >= (c0 + cols2) - b
+            F = lax.dynamic_update_slice(
+                F, jnp.where(in_band, fcol, 0.0), (0, c0)
+            )
+            # --- Z_j = A_cur Vhat T - 1/2 Vhat T^T (Vhat^T A_cur Vhat) T ---
+            M = Bv @ Vhat
+            if jp > 0:
+                M = (
+                    M
+                    - Zbuf[:, :c0] @ (Vbuf[:, :c0].T @ Vhat)
+                    - Vbuf[:, :c0] @ (Zbuf[:, :c0].T @ Vhat)
+                )
+            MT = M @ T_j
+            Z_j = MT - 0.5 * Vhat @ (T_j.T @ (Vhat.T @ MT))
+            Vbuf = lax.dynamic_update_slice(Vbuf, Vhat, (0, c0))
+            Zbuf = lax.dynamic_update_slice(Zbuf, Z_j, (0, c0))
+            t_ref[jp, :, :] = T_j
+        # Factors stay resident: V/F are constant-index output blocks, Z is
+        # VMEM scratch — the trailing sweep below never touches HBM for them.
+        v_ref[...] = Vbuf
+        f_ref[...] = F
+        z_ref[...] = Zbuf
+
+    # --- one lower-triangular trailing tile per grid step -------------------
+    i = ti_ref[t]
+    j = tj_ref[t]
+    ri = w + i * bm
+    rj = w + j * bm
+    C = bv_ref[pl.ds(ri, bm), pl.ds(rj, bm)]
+    Zi = z_ref[pl.ds(ri, bm), :]
+    Vi = v_ref[pl.ds(ri, bm), :]
+    Zj = z_ref[pl.ds(rj, bm), :]
+    Vj = v_ref[pl.ds(rj, bm), :]
+    acc = jnp.dot(Zi, Vj.T, preferred_element_type=jnp.float32) + jnp.dot(
+        Vi, Zj.T, preferred_element_type=jnp.float32
+    )
+    c_ref[...] = C - acc.astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "w", "bm", "interpret"))
+def fused_panel_update_pallas(
+    Bv: jax.Array, *, b: int, w: int, bm: int = 128, interpret: bool = False
+):
+    """Fused block step on a trailing view ``Bv`` (m, m).
+
+    Factors the first ``w`` columns (q = w/b panels) to bandwidth ``b`` and
+    applies the rank-2w trailing update, all in one kernel.  Returns the raw
+    kernel outputs ``(C_low, V, F, Ts)``:
+
+    * ``C_low`` (mt_pad, mt_pad): lower tiles of the updated trailing
+      submatrix (upper tiles undefined, like ``syr2k_lower_pallas``);
+    * ``V``     (m_pad, w): the block's Householder panels;
+    * ``F``     (m_pad, w): exact final (banded) values of the factored
+      columns;
+    * ``Ts``    (q, b, b): per-panel compact-WY T factors.
+
+    The jit-facing assembly (symmetrization, write-back into the view) lives
+    in ``repro.kernels.ops.fused_panel_update``; padding rows are zero.
+    """
+    m = Bv.shape[0]
+    if w % b != 0 or w >= m or m - w < b:
+        raise ValueError(f"need w % b == 0 and b <= m - w, got m={m} w={w} b={b}")
+    q = w // b
+    mt = m - w
+    bm = min(bm, max(8, 1 << (mt - 1).bit_length()))
+    mt_pad = -(-mt // bm) * bm
+    m_pad = w + mt_pad
+    dtype = Bv.dtype
+
+    Bp = jnp.zeros((m_pad, m_pad), dtype).at[:m, :m].set(Bv)
+    nmt = mt_pad // bm
+    ti, tj = lower_tile_indices(nmt)
+    T = len(ti)
+
+    def const2(t, ti, tj):
+        return (0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T,),
+        in_specs=[pl.BlockSpec((m_pad, m_pad), const2)],
+        out_specs=[
+            pl.BlockSpec((bm, bm), lambda t, ti, tj: (ti[t], tj[t])),
+            pl.BlockSpec((m_pad, w), const2),
+            pl.BlockSpec((m_pad, w), const2),
+            pl.BlockSpec((q, b, b), lambda t, ti, tj: (0, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((m_pad, w), dtype)],
+    )
+    kernel = functools.partial(_fused_kernel, m=m_pad, w=w, b=b, bm=bm)
+    C_low, V, F, Ts = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((mt_pad, mt_pad), dtype),
+            jax.ShapeDtypeStruct((m_pad, w), dtype),
+            jax.ShapeDtypeStruct((m_pad, w), dtype),
+            jax.ShapeDtypeStruct((q, b, b), dtype),
+        ),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=(ARBITRARY,),
+        ),
+        interpret=interpret,
+        name="fused_panel_update",
+    )(jnp.asarray(ti), jnp.asarray(tj), Bp)
+    return C_low, V, F, Ts

@@ -1,0 +1,88 @@
+"""Interpret-mode and VMEM residency ceilings for ALL Pallas kernels.
+
+Every VMEM-resident kernel in this package has two dispatch ceilings:
+
+* a **VMEM ceiling** — the largest problem whose resident working set fits
+  a ~16 MB fp32 TPU core; above it the jit wrappers in ``repro.kernels.ops``
+  fall back to the XLA implementation (same math, HBM-resident).
+* an **interpret ceiling** — off-TPU the kernels run under the Pallas
+  interpreter for validation only, and the emulated grid unrolls into the
+  traced program; above the validation sizes the wrappers fall back so CPU
+  oracle runs stay cheap.  An EXPLICIT ``interpret=True`` (validating the
+  kernel itself) bypasses the interpret ceiling — see the ops wrappers.
+
+This module is the ONE home for those numbers (they used to be scattered:
+the bulge ceiling as an ops-module constant sometimes overridden via a
+test env var, the back-transform ceiling inline in its kernel module).
+Every ceiling can be overridden with an environment variable
+``REPRO_<NAME>`` (e.g. ``REPRO_BULGE_INTERPRET_MAX_N=128``) — read at call
+time, so tests and deployments can retune dispatch without code changes.
+
+Ceilings (fp32 elements unless named ``_N``/``_M``, which are matrix sides):
+
+==============================  =======  ==========================================
+name                            default  gates
+==============================  =======  ==========================================
+BULGE_VMEM_MAX_N                   1408  bulge wavefront kernel (padded matrix
+                                         resident: ~(n + 6b)^2 * 4 bytes)
+BULGE_INTERPRET_MAX_N                64  same kernel off-TPU (3(n-3)+1 grid steps
+                                         unroll under the interpreter)
+BACKTRANSFORM_VMEM_MAX_ELEMS    4194304  blocked Q2 back-transform (two resident
+                                         (n + K*b, m) panels + reflector block)
+BACKTRANSFORM_INTERPRET_MAX_N        48  same kernel off-TPU ((S,)-grid emulation)
+FUSED_PANEL_VMEM_MAX_ELEMS      3145728  fused panel+trailing kernel (resident
+                                         trailing view + V/Z/F factor buffers)
+FUSED_PANEL_INTERPRET_MAX_M          96  same kernel off-TPU (the in-kernel panel
+                                         recurrence unrolls q*b column steps)
+PANEL_QR_VMEM_MAX_M                8192  fused panel-QR kernel (panel + ~3
+                                         temporaries resident; b <= 64)
+==============================  =======  ==========================================
+"""
+from __future__ import annotations
+
+import os
+
+__all__ = ["LIMITS", "ENV_PREFIX", "limit"]
+
+ENV_PREFIX = "REPRO_"
+
+LIMITS = {
+    # fp32 VMEM ceiling for the VMEM-resident bulge kernel (kernels/bulge.py).
+    "BULGE_VMEM_MAX_N": 1408,
+    # Off-TPU the kernel exists for validation only (no VMEM to be resident
+    # in) and the emulated grid unrolls all 3(n-3)+1 wavefronts into the
+    # traced program — above validation sizes fall back to the XLA executor.
+    "BULGE_INTERPRET_MAX_N": 64,
+    # VMEM budget for the resident back-transform panels (+ streamed
+    # reflector block), in fp32 elements (~16 MB core).  BOTH the input and
+    # output (n + K*b, m) padded panels are constant-index blocks (resident),
+    # so the gate counts two copies (kernels/backtransform.py).
+    "BACKTRANSFORM_VMEM_MAX_ELEMS": 4 * 1024 * 1024,
+    # Off-TPU the emulated (S,)-grid costs one interpreter step per sweep.
+    "BACKTRANSFORM_INTERPRET_MAX_N": 48,
+    # VMEM budget for the fused panel+trailing kernel, in fp32 elements: the
+    # whole (m, m) trailing view is resident plus four (m, w) factor buffers
+    # (V, Z, F and the streamed output tile) — see kernels/fused_panel.py.
+    "FUSED_PANEL_VMEM_MAX_ELEMS": 3 * 1024 * 1024,
+    # Off-TPU the in-kernel panel recurrence unrolls q*b Householder column
+    # steps per block; validation sizes only (m = trailing-view side).
+    "FUSED_PANEL_INTERPRET_MAX_M": 96,
+    # Panel m*b*4 bytes + ~3 temporaries must fit VMEM (kernels/panel.py).
+    "PANEL_QR_VMEM_MAX_M": 8192,
+}
+
+
+def limit(name: str) -> int:
+    """The active value of ceiling ``name`` (env override wins over default).
+
+    Reads ``REPRO_<name>`` from the environment at every call so overrides
+    take effect without reimporting (tests monkeypatch the env var).
+    """
+    if name not in LIMITS:
+        raise KeyError(
+            f"unknown kernel limit {name!r}; expected one of {sorted(LIMITS)}"
+        )
+    env = os.environ.get(ENV_PREFIX + name)
+    if env is not None and env != "":
+        return int(env)
+    return LIMITS[name]

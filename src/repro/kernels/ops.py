@@ -22,41 +22,28 @@ import jax.numpy as jnp
 
 from repro.backend import probe
 
+from .limits import limit
 from .syr2k import syr2k_lower_pallas
-from .bulge import bulge_chase_pallas
+from .bulge import bulge_wavefront_pallas
 from .panel import panel_qr_pallas
+from .fused_panel import fused_panel_update_pallas
 from .backtransform import backtransform_wy_pallas
 
 __all__ = [
     "syr2k",
     "trailing_update",
+    "fused_panel_update",
+    "fused_uses_kernel",
     "bulge_chase",
+    "bulge_wavefront",
     "bulge_uses_kernel",
     "panel_qr",
     "backtransform_wy",
     "backtransform_uses_kernel",
-    "BULGE_VMEM_MAX_N",
-    "BULGE_INTERPRET_MAX_N",
-    "BACKTRANSFORM_VMEM_MAX_ELEMS",
-    "BACKTRANSFORM_INTERPRET_MAX_N",
 ]
 
-# fp32 VMEM ceiling for the VMEM-resident bulge kernel (see kernels/bulge.py).
-BULGE_VMEM_MAX_N = 1408
-# Interpret-mode ceiling: off-TPU the kernel exists for validation only (no
-# VMEM to be resident in), and the emulated grid unrolls all 3(n-3)+1
-# wavefronts into the traced program — so above the validation sizes fall
-# back to the XLA wavefront executor (same schedule, scan-rolled).
-BULGE_INTERPRET_MAX_N = 64
-
-# VMEM budget for the resident back-transform panels (+ streamed reflector
-# block), in fp32 elements (~16 MB core).  BOTH the input and output
-# (n + K*b, m) padded panels are constant-index blocks (resident), so the
-# gate counts two copies; above this the XLA scan implementation takes over.
-BACKTRANSFORM_VMEM_MAX_ELEMS = 4 * 1024 * 1024
-# Off-TPU the emulated (S,)-grid costs one interpreter step per sweep;
-# validation sizes only, then fall back to the XLA scan path.
-BACKTRANSFORM_INTERPRET_MAX_N = 48
+# All interpret-mode / VMEM dispatch ceilings live in repro.kernels.limits
+# (one table, env-overridable); the wrappers below read them at call time.
 
 
 def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
@@ -110,16 +97,70 @@ def trailing_update(
     return syr2k(Z, Y, C, alpha=-1.0, **kw)
 
 
+def fused_uses_kernel(
+    m: int, w: int, b: int, *, bm: int = 128, interpret: Optional[bool] = None
+) -> bool:
+    """Whether :func:`fused_panel_update` on an (m, m) trailing view runs the
+    fused Pallas kernel (True) or the unfused panel_qr + syr2k composition
+    (False).  Single source of truth for the dispatch decision."""
+    explicit = interpret is not None
+    interp = probe.interpret_mode() if interpret is None else interpret
+    if interp and not explicit:
+        return m <= limit("FUSED_PANEL_INTERPRET_MAX_M")
+    mt = m - w
+    bm = min(bm, max(8, 1 << (mt - 1).bit_length()))
+    mt_pad = -(-mt // bm) * bm
+    m_pad = w + mt_pad
+    # Resident trailing view + V/F/Z factor buffers + the streamed out tile.
+    resident = m_pad * m_pad + 3 * m_pad * w + bm * bm
+    return resident <= limit("FUSED_PANEL_VMEM_MAX_ELEMS")
+
+
+def fused_panel_update(
+    Bv: jax.Array,
+    b: int,
+    w: int,
+    *,
+    bm: int = 128,
+    interpret: Optional[bool] = None,
+):
+    """One fused first-stage block step on a trailing view (m, m): q = w/b
+    panel QRs + the rank-2w two-sided trailing update, factors VMEM-resident.
+
+    Returns ``(new_view, Vbuf (m, w), Ts (q, b, b))`` with the contract of
+    ``repro.core.band_reduction._reduce_block``.  Above the VMEM/interpret
+    ceilings it falls back to the unfused composition on the active
+    backend's trailing update (same math, streamed).
+    """
+    m = Bv.shape[0]
+    if not fused_uses_kernel(m, w, b, bm=bm, interpret=interpret):
+        from repro.backend import registry
+        from repro.core.band_reduction import _reduce_block
+        from repro.core.panel_qr import panel_qr_geqrf
+
+        return _reduce_block(Bv, b, w, panel_qr_geqrf, registry.resolve("trailing_update"))
+    interpret = probe.interpret_mode() if interpret is None else interpret
+    C_low, V, F, Ts = fused_panel_update_pallas(Bv, b=b, w=w, bm=bm, interpret=interpret)
+    mt = m - w
+    low = C_low[:mt, :mt]
+    # Symmetrize from the lower tiles only (upper tiles are undefined).
+    trailing = jnp.tril(low) + jnp.tril(low, -1).T
+    new_view = Bv.at[w:, w:].set(trailing)
+    new_view = new_view.at[:, :w].set(F[:m])
+    new_view = new_view.at[:w, w:].set(F[w:m, :].T)
+    return new_view, V[:m], Ts
+
+
 def bulge_uses_kernel(n: int, *, interpret: Optional[bool] = None) -> bool:
-    """Whether :func:`bulge_chase` at size ``n`` runs the Pallas kernel
-    (True) or the XLA wavefront fallback (False).  Single source of truth
-    for the dispatch decision — benchmarks/diagnostics must use this rather
-    than re-deriving the ceilings.
+    """Whether :func:`bulge_chase` / :func:`bulge_wavefront` at size ``n``
+    run the Pallas kernel (True) or the XLA wavefront fallback (False).
+    Single source of truth for the dispatch decision — benchmarks and
+    diagnostics must use this rather than re-deriving the ceilings.
     """
     explicit = interpret is not None
     interp = probe.interpret_mode() if interpret is None else interpret
-    ceiling = BULGE_INTERPRET_MAX_N if (interp and not explicit) else BULGE_VMEM_MAX_N
-    return n <= ceiling
+    name = "BULGE_INTERPRET_MAX_N" if (interp and not explicit) else "BULGE_VMEM_MAX_N"
+    return n <= limit(name)
 
 
 def bulge_chase(B: jax.Array, b: int, *, interpret: Optional[bool] = None) -> jax.Array:
@@ -135,7 +176,41 @@ def bulge_chase(B: jax.Array, b: int, *, interpret: Optional[bool] = None) -> ja
 
         return chase_wavefront(B, b)
     interpret = probe.interpret_mode() if interpret is None else interpret
-    return bulge_chase_pallas(B, b, interpret=interpret)
+    return bulge_wavefront_pallas(B, b, interpret=interpret)
+
+
+def bulge_wavefront(
+    B: jax.Array,
+    b: int,
+    *,
+    return_log: bool = False,
+    group: Optional[int] = None,
+    interpret: Optional[bool] = None,
+):
+    """Grouped wavefront bulge chase, optionally emitting the reflector log.
+
+    The fused-mode registry op: the kernel chases ``group`` bulges per grid
+    cell (default: the per-platform ``repro.solver.autotune.wavefront_group``)
+    and can emit the sweep-major ``ChaseLog`` directly, so eigenvector runs
+    stay on the kernel path.  Above the VMEM/interpret ceilings — or for
+    trivial sizes — it falls back to the slice-write XLA wavefront executor.
+    """
+    n = B.shape[0]
+    from repro.core.bulge_chasing import ChaseLog, chase_wavefront_slices
+
+    if n < 3 or b <= 1 or not bulge_uses_kernel(n, interpret=interpret):
+        return chase_wavefront_slices(B, b, return_log)
+    interpret = probe.interpret_mode() if interpret is None else interpret
+    if group is None:
+        from repro.solver.autotune import wavefront_group
+
+        group = wavefront_group(n, b)
+    if not return_log:
+        return bulge_wavefront_pallas(B, b, group=int(group), interpret=interpret)
+    out, (vs, taus, row0) = bulge_wavefront_pallas(
+        B, b, group=int(group), return_log=True, interpret=interpret
+    )
+    return out, ChaseLog(vs=vs, taus=taus, row0=row0, n=n, b=b)
 
 
 def panel_qr(panel: jax.Array, *, interpret: Optional[bool] = None):
@@ -154,13 +229,13 @@ def backtransform_uses_kernel(
     explicit = interpret is not None
     interp = probe.interpret_mode() if interpret is None else interpret
     if interp and not explicit:
-        return n <= BACKTRANSFORM_INTERPRET_MAX_N
+        return n <= limit("BACKTRANSFORM_INTERPRET_MAX_N")
     from repro.core.backtransform import _sweep_shape
 
     S, K = _sweep_shape(n, b)
     # Two resident padded panels (in + out) + one streamed reflector block.
     resident = 2 * (n + K * b) * m + K * b
-    return S > 0 and resident <= BACKTRANSFORM_VMEM_MAX_ELEMS
+    return S > 0 and resident <= limit("BACKTRANSFORM_VMEM_MAX_ELEMS")
 
 
 def backtransform_wy(

@@ -21,11 +21,25 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["panel_qr_pallas"]
+__all__ = ["panel_qr_pallas", "panel_qr_body"]
 
 
-def _panel_qr_kernel(p_ref, v_ref, t_ref, tau_ref, r_ref, *, m: int, b: int):
-    A = p_ref[...]
+def panel_qr_body(A: jax.Array, b: int, *, lapack_sign: bool = False):
+    """The in-kernel panel-QR math on a (m, b) VALUE (not a ref).
+
+    Unrolls the b Householder column steps and the larft T recurrence with
+    masked whole-array updates only (no dynamic gathers), so it lowers both
+    as a standalone Pallas kernel body (:func:`panel_qr_pallas`) and inlined
+    inside larger fused kernels (``repro.kernels.fused_panel``).
+
+    Returns ``(V, T, taus, R)``.  With ``lapack_sign=False`` the reflector
+    signs follow ``repro.core.panel_qr.panel_qr_householder`` (beta = +|x|,
+    this kernel's historical convention); with ``lapack_sign=True`` they
+    follow LAPACK ``larfg`` / ``panel_qr_geqrf`` (beta = -sign(alpha)·|x|),
+    which the fused first-stage kernel uses so its output is comparable to
+    the geqrf-based unfused composition.
+    """
+    m = A.shape[0]
     dtype = A.dtype
     rows = lax.broadcasted_iota(jnp.int32, (m,), 0)
     cols = lax.broadcasted_iota(jnp.int32, (b,), 0)
@@ -38,14 +52,24 @@ def _panel_qr_kernel(p_ref, v_ref, t_ref, tau_ref, r_ref, *, m: int, b: int):
         alpha = colv[j]
         sigma = jnp.sum(jnp.where(rows > j, colv * colv, 0.0))
         mu = jnp.sqrt(alpha * alpha + sigma)
-        safe_denom = jnp.where(alpha + mu == 0, jnp.ones((), dtype), alpha + mu)
-        v0 = jnp.where(alpha <= 0, alpha - mu, -sigma / safe_denom)
         degenerate = sigma == 0
-        v0_safe = jnp.where(degenerate, jnp.ones((), dtype), v0)
-        tau = jnp.where(
-            degenerate, 0.0, 2.0 * v0_safe * v0_safe / (sigma + v0_safe * v0_safe)
-        )
-        beta = jnp.where(degenerate, alpha, mu)
+        if lapack_sign:
+            sign_a = jnp.where(alpha >= 0, 1.0, -1.0)
+            beta_nd = -sign_a * mu
+            safe_beta = jnp.where(beta_nd == 0, jnp.ones((), dtype), beta_nd)
+            tau = jnp.where(degenerate, 0.0, (beta_nd - alpha) / safe_beta)
+            beta = jnp.where(degenerate, alpha, beta_nd)
+            # alpha - beta = sign(alpha)(|alpha| + mu): no cancellation.
+            denom = alpha - beta_nd
+            v0_safe = jnp.where(denom == 0, jnp.ones((), dtype), denom)
+        else:
+            safe_denom = jnp.where(alpha + mu == 0, jnp.ones((), dtype), alpha + mu)
+            v0 = jnp.where(alpha <= 0, alpha - mu, -sigma / safe_denom)
+            v0_safe = jnp.where(degenerate, jnp.ones((), dtype), v0)
+            tau = jnp.where(
+                degenerate, 0.0, 2.0 * v0_safe * v0_safe / (sigma + v0_safe * v0_safe)
+            )
+            beta = jnp.where(degenerate, alpha, mu)
         v = jnp.where(rows == j, 1.0, jnp.where(rows > j, colv / v0_safe, 0.0))
         # Apply H to the remaining columns.
         w = v @ A  # (b,)
@@ -68,10 +92,15 @@ def _panel_qr_kernel(p_ref, v_ref, t_ref, tau_ref, r_ref, *, m: int, b: int):
         tcol = jnp.where(cols == j, taus[j], tcol)
         T = jnp.where((cols == j)[None, :], tcol[:, None], T)
 
+    return V, T, taus, A[:b, :]
+
+
+def _panel_qr_kernel(p_ref, v_ref, t_ref, tau_ref, r_ref, *, m: int, b: int):
+    V, T, taus, R = panel_qr_body(p_ref[...], b)
     v_ref[...] = V
     t_ref[...] = T
     tau_ref[...] = taus.reshape(1, b)
-    r_ref[...] = A[:b, :]
+    r_ref[...] = R
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

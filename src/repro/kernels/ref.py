@@ -10,7 +10,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["syr2k_ref", "trailing_update_ref", "symm_ref", "panel_qr_ref", "bulge_sweep_ref"]
+__all__ = [
+    "syr2k_ref",
+    "trailing_update_ref",
+    "fused_panel_update_ref",
+    "symm_ref",
+    "panel_qr_ref",
+    "bulge_sweep_ref",
+    "bulge_wavefront_ref",
+]
 
 
 def syr2k_ref(
@@ -30,6 +38,20 @@ def trailing_update_ref(C: jax.Array, Y: jax.Array, Z: jax.Array) -> jax.Array:
     return C - Z @ Y.T - Y @ Z.T
 
 
+def fused_panel_update_ref(Bv: jax.Array, b: int, w: int):
+    """Oracle for the fused panel+trailing kernel: the unfused composition.
+
+    Literally the legacy block step — geqrf panel QRs + the jnp trailing
+    update — so the fused jnp registry path is BITWISE the unfused jnp path
+    (same XLA subgraph), and the Pallas kernel is tested against it allclose.
+    Returns ``(new_view, Vbuf (m, w), Ts (w//b, b, b))``.
+    """
+    from repro.core.band_reduction import _reduce_block
+    from repro.core.panel_qr import panel_qr_geqrf
+
+    return _reduce_block(Bv, b, w, panel_qr_geqrf, trailing_update_ref)
+
+
 def symm_ref(A: jax.Array, V: jax.Array) -> jax.Array:
     """A @ V with A symmetric (oracle ignores the symmetry)."""
     return A @ V
@@ -47,3 +69,11 @@ def bulge_sweep_ref(B: jax.Array, b: int):
     from repro.core.bulge_chasing import chase_sequential
 
     return chase_sequential(B, b)
+
+
+def bulge_wavefront_ref(B: jax.Array, b: int, *, return_log: bool = False):
+    """Oracle for the grouped-wavefront kernel: the scatter-write wavefront
+    executor (the legacy accelerated schedule — same ops, same order)."""
+    from repro.core.bulge_chasing import chase_wavefront
+
+    return chase_wavefront(B, b, return_log)

@@ -34,9 +34,11 @@ __all__ = [
     "blocking_defaults",
     "tile_defaults",
     "backtransform_group",
+    "wavefront_group",
     "DEFAULT_B",
     "DEFAULT_NB",
     "DEFAULT_BT_GROUP",
+    "DEFAULT_WAVEFRONT_GROUP",
 ]
 
 DEFAULT_B = 8
@@ -76,16 +78,39 @@ _BT_GROUP_TABLE = {
     ),
 }
 
+# Fused-chase wavefront group size G: the bulge_wavefront kernel chases G
+# independent bulges per grid cell (repro.kernels.bulge).  On TPU each
+# window update is VPU-bound, so one bulge per cell (the issue's "each
+# bulge's b-row window as a grid cell") keeps cells small and lets the
+# sequential grid overlap scalar setup with compute; under the interpreter
+# every grid cell costs a Python-level step, so grouping several bulges per
+# cell amortizes it.  (n_upper_exclusive | None, G) rows like the tables
+# above; G is clamped to the wavefront's slot count at dispatch time.
+DEFAULT_WAVEFRONT_GROUP = 1
+_WAVEFRONT_GROUP_TABLE = {
+    "tpu": (
+        (None, 1),
+    ),
+    None: (  # interpret mode
+        (None, 4),
+    ),
+}
+
 # platform -> op -> tile kwargs (absorbed from repro.backend.registry; the
 # registry's pallas wrappers call back into tile_defaults below).
 _TILE_TABLE = {
     "tpu": {
         "syr2k": dict(bm=256, bk=256),
         "trailing_update": dict(bm=256, bk=256),
+        # Trailing tile of the fused panel+trailing kernel.  Smaller than
+        # the standalone syr2k tile: the resident factor buffers (V/Z/F at
+        # k = nb) share VMEM with the trailing view.
+        "fused_panel_update": dict(bm=128),
     },
     None: {  # interpret mode: small tiles keep emulated grids cheap
         "syr2k": dict(bm=128, bk=128),
         "trailing_update": dict(bm=128, bk=128),
+        "fused_panel_update": dict(bm=64),
     },
 }
 
@@ -128,6 +153,26 @@ def backtransform_group(n: int, b: int, platform: Optional[str] = None) -> int:
 
     _, K = _sweep_shape(n, b)
     return max(1, min(int(g), K))
+
+
+def wavefront_group(n: int, b: int, platform: Optional[str] = None) -> int:
+    """Bulge-chase wavefront group size G for an n x n problem at bandwidth b.
+
+    Table value clamped to [1, A] with A the wavefront slot count — groups
+    wider than a whole wavefront buy nothing.
+    """
+    rows = _WAVEFRONT_GROUP_TABLE.get(
+        _platform_key(platform), _WAVEFRONT_GROUP_TABLE[None]
+    )
+    g = DEFAULT_WAVEFRONT_GROUP
+    for bound, val in rows:
+        if bound is None or n < bound:
+            g = val
+            break
+    # Deferred import: repro.core pulls in repro.solver at package scope.
+    from repro.core.bulge_chasing import max_active_sweeps
+
+    return max(1, min(int(g), max_active_sweeps(n, b)))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -43,7 +43,10 @@ class PadPolicy:
     """How the executor makes ragged work fit rectangular plans.
 
     * ``bucket_sizes`` — allowed matrix sizes.  ``None`` (default) buckets
-      by *exact* n: results are bit-identical to a per-matrix plan loop.
+      by *exact* n: results are bit-identical to a per-matrix plan loop on
+      the jnp reference backend (the Pallas default agrees to rounding —
+      interpret-mode kernels are traced inline, so vmap changes how they
+      fuse with surrounding ops and can perturb the last ulp).
       When given (e.g. ``(32, 64, 128)``), every matrix is embedded in the
       smallest bucket >= its n as ``blockdiag(A, fill * I)`` — the
       ridge-identity fill, with ``fill`` strictly above the matrix's
@@ -54,7 +57,7 @@ class PadPolicy:
       through inverse iteration, but its (unreliable) columns are discarded
       by the window slice before reconstruction.  Padded results are
       approximate (block decoupling is exact only in exact arithmetic);
-      exact buckets stay bit-identical.
+      exact buckets keep the per-backend parity above.
     * ``batch_multiple`` — pad each bucket's matrix count up to a multiple
       (identity-filled lanes, dropped on scatter).  Stabilizes the jit
       cache when traffic arrives in ragged batch sizes; the device path

@@ -22,6 +22,7 @@ __all__ = ["Spectrum", "EvdConfig", "full_spectrum", "by_index", "by_count"]
 METHODS = ("two_stage", "direct", "jacobi")
 CHASES = ("wavefront", "sequential")
 BACKTRANSFORMS = ("blocked", "scan")
+TRIDIAGS = ("fused", "unfused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +99,12 @@ class EvdConfig:
       ``repro.core.backtransform``) | ``scan`` (the per-reflector appliers,
       kept as the numerical/ordering oracle).  Two-stage only; the direct
       and Jacobi methods ignore it.
+    * ``tridiag`` — first-stage pipeline generation: ``fused`` (band
+      reduction as fused panel+trailing ops, grouped-wavefront bulge chase)
+      | ``unfused`` (the legacy panel_qr + syr2k composition and
+      scatter-write chase, kept as the oracle).  ``None`` = the process
+      default (``REPRO_TRIDIAG`` env var, else ``fused``), resolved at plan
+      time like ``backend``.  Two-stage only.
     * ``b, nb``   — bandwidth / update block.  ``None`` = resolved from the
       per-platform autotuning table at plan time (repro.solver.autotune).
     * ``backend`` — kernel-registry backend pin (``pallas`` | ``jnp`` | a
@@ -111,6 +118,7 @@ class EvdConfig:
     method: str = "two_stage"
     chase: str = "wavefront"
     backtransform: str = "blocked"
+    tridiag: Optional[str] = None
     b: Optional[int] = None
     nb: Optional[int] = None
     backend: Optional[str] = None
@@ -127,6 +135,10 @@ class EvdConfig:
             raise ValueError(
                 f"unknown backtransform {self.backtransform!r}; expected one "
                 f"of {BACKTRANSFORMS}"
+            )
+        if self.tridiag is not None and self.tridiag not in TRIDIAGS:
+            raise ValueError(
+                f"unknown tridiag {self.tridiag!r}; expected one of {TRIDIAGS}"
             )
         if self.b is not None and self.b < 1:
             raise ValueError(f"b must be >= 1, got {self.b}")

@@ -26,7 +26,9 @@ optionally padded up to declared ``bucket_sizes`` with a ridge-identity
 fill — each bucket executes as ONE cached :class:`BatchPlan` (one compile
 per bucket, provable via ``trace_count``), and results are scattered back
 into the input structure.  With the default exact policy the result is
-bit-identical to a per-matrix ``EvdPlan`` loop.
+bit-identical to a per-matrix ``EvdPlan`` loop on the jnp reference
+backend (rounding-level on the Pallas default: interpreted kernels fuse
+with surrounding ops, so vmap can perturb rounding).
 
 ``devices=`` routes every bucket through the compat ``shard_map`` path
 (batch sharded over the mesh, full solver local per device) — this is the

@@ -85,9 +85,16 @@ _deps = _Deps()
 
 # ------------------------------------------------------------------ pipeline
 def _tridiag_pipeline(
-    A, *, b, nb, method, chase, return_reflectors=False, merge_reflectors=False
+    A, *, b, nb, method, chase, return_reflectors=False, merge_reflectors=False,
+    tridiag=None,
 ):
-    """Reduce symmetric A to tridiagonal (d, e) via the requested pipeline."""
+    """Reduce symmetric A to tridiagonal (d, e) via the requested pipeline.
+
+    ``tridiag`` selects the first-stage generation ("fused" | "unfused" |
+    None = process default); both generations emit identical
+    ``BandReflectors``/``ChaseLog`` structures, so everything downstream
+    (bisection, inverse iteration, back-transform) is mode-oblivious.
+    """
     if method == "direct":
         T, refl = _deps.direct_tridiagonalize(A, return_reflectors=True)
         d, e = _deps.extract_tridiag(T)
@@ -98,14 +105,16 @@ def _tridiag_pipeline(
     if not return_reflectors:
         # Values-only fast path: no reflector log, so the bulge chase can
         # dispatch to the VMEM-resident Pallas kernel via the registry.
-        Bband = _deps.band_reduce(A, b, nb)
-        T = _deps.band_to_tridiag(Bband, b, method=chase)
+        Bband = _deps.band_reduce(A, b, nb, mode=tridiag)
+        T = _deps.band_to_tridiag(Bband, b, method=chase, mode=tridiag)
         return _deps.extract_tridiag(T)
 
     Bband, refl1 = _deps.band_reduce(
-        A, b, nb, return_reflectors=True, merge_ts=merge_reflectors
+        A, b, nb, return_reflectors=True, merge_ts=merge_reflectors, mode=tridiag
     )
-    T, log2 = _deps.band_to_tridiag(Bband, b, method=chase, return_log=True)
+    T, log2 = _deps.band_to_tridiag(
+        Bband, b, method=chase, return_log=True, mode=tridiag
+    )
     d, e = _deps.extract_tridiag(T)
     return d, e, ("two_stage", (refl1, log2))
 
@@ -183,6 +192,7 @@ class EvdPlan:
     fallback_reason: Optional[str] = None
     bt_group: int = 0                # blocked back-transform WY group size G
                                      # (0: back-transform not applicable)
+    tridiag: str = "fused"           # resolved first-stage pipeline generation
 
     # ---- derived views ----------------------------------------------------
     @property
@@ -240,6 +250,7 @@ class EvdPlan:
             f"EvdPlan(n={self.n}, {self.dtype}, method={self.method}, "
             f"b={self.b}, nb={self.nb}, backend={self.backend}, "
             f"platform={self.platform}, k={self.k}/{self.n}, "
+            f"tridiag={self.tridiag}, "
             f"backtransform={self.config.backtransform}"
             + (f"[G={self.bt_group}]" if self.bt_group else "")
             + ")"
@@ -273,8 +284,11 @@ def plan(n: int, dtype, config: EvdConfig = EvdConfig()) -> EvdPlan:
         backend = registry.effective_default_backend()
     else:
         backend = registry.validate_backend(config.backend)
+    # None = process default, resolved NOW (like backend) so the env knob is
+    # part of the cache key rather than a silent trace-time dependency.
+    tridiag = config.tridiag or registry.default_tridiag()
 
-    key = (n, dtype_name, config, backend, platform)
+    key = (n, dtype_name, config, backend, platform, tridiag)
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
         return cached
@@ -300,6 +314,7 @@ def plan(n: int, dtype, config: EvdConfig = EvdConfig()) -> EvdPlan:
         platform=platform,
         fallback_reason=reason,
         bt_group=bt_group,
+        tridiag=tridiag,
     )
     _PLAN_CACHE[key] = pl
     return pl
@@ -352,7 +367,8 @@ def _execute(A: jax.Array, *, pl: EvdPlan, eigenvectors: bool):
 
         if not eigenvectors:
             d, e = _tridiag_pipeline(
-                A, b=pl.b, nb=pl.nb, method=pl.method, chase=pl.config.chase
+                A, b=pl.b, nb=pl.nb, method=pl.method, chase=pl.config.chase,
+                tridiag=pl.tridiag,
             )
             return _deps.eigvalsh_tridiag_range(
                 d, e, start=start, count=count, max_iter=pl.bisect_iters
@@ -362,6 +378,7 @@ def _execute(A: jax.Array, *, pl: EvdPlan, eigenvectors: bool):
         d, e, refl = _tridiag_pipeline(
             A, b=pl.b, nb=pl.nb, method=pl.method, chase=pl.config.chase,
             return_reflectors=True, merge_reflectors=mode == "blocked",
+            tridiag=pl.tridiag,
         )
         w = _deps.eigvalsh_tridiag_range(
             d, e, start=start, count=count, max_iter=pl.bisect_iters

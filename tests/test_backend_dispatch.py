@@ -3,8 +3,9 @@
 Covers the acceptance contract of the backend subsystem:
 * every (op, backend) pair resolves and the pallas/jnp pairs agree
   numerically;
-* ``eigh(A, method="two_stage")`` executes the Pallas trailing update via
-  the registry by default;
+* ``eigh(A, method="two_stage")`` executes the Pallas fused first-stage op
+  via the registry by default (``REPRO_TRIDIAG=unfused`` routes the legacy
+  panel_qr + trailing_update composition instead);
 * ``REPRO_KERNEL_BACKEND=jnp`` (and the programmatic overrides) force the
   reference path.
 """
@@ -140,23 +141,42 @@ def test_eigh_two_stage_resolves_pallas_by_default(rng, monkeypatch):
     from repro.core import eigh
 
     monkeypatch.delenv(registry.ENV_VAR, raising=False)
-    spy = _spy_impl(monkeypatch, "trailing_update", "pallas")
+    monkeypatch.delenv(registry.TRIDIAG_ENV_VAR, raising=False)
+    spy = _spy_impl(monkeypatch, "fused_panel_update", "pallas")
     # Unique (shape, blocking) so the jit cache cannot satisfy this call
     # without re-tracing through the registry.
     n = 56
     A = jnp.asarray(random_symmetric(rng, n))
     w, V = eigh(A, method="two_stage", b=4, nb=24)
-    assert spy["n"] > 0, "eigh did not route the trailing update to Pallas"
+    assert spy["n"] > 0, "eigh did not route the fused first stage to Pallas"
     resid = np.asarray(A) @ np.asarray(V) - np.asarray(V) * np.asarray(w)[None, :]
     assert np.abs(resid).max() < 5e-4 * float(np.abs(np.asarray(w)).max())
+
+
+def test_unfused_mode_routes_trailing_update(rng, monkeypatch):
+    # The legacy composition stays reachable as the oracle: pinning
+    # REPRO_TRIDIAG=unfused must route panel_qr + trailing_update again.
+    from repro.core import eigh
+
+    monkeypatch.delenv(registry.ENV_VAR, raising=False)
+    monkeypatch.setenv(registry.TRIDIAG_ENV_VAR, "unfused")
+    spy_trailing = _spy_impl(monkeypatch, "trailing_update", "pallas")
+    spy_fused = _spy_impl(monkeypatch, "fused_panel_update", "pallas")
+    n = 52
+    A = jnp.asarray(random_symmetric(rng, n))
+    w = eigh(A, method="two_stage", b=4, nb=16, eigenvectors=False)
+    assert spy_trailing["n"] > 0, "unfused mode skipped the trailing update"
+    assert spy_fused["n"] == 0
+    assert w.shape == (n,)
 
 
 def test_env_var_forces_jnp_fallback(rng, monkeypatch):
     from repro.core import eigh
 
     monkeypatch.setenv(registry.ENV_VAR, "jnp")
-    spy_pallas = _spy_impl(monkeypatch, "trailing_update", "pallas")
-    spy_jnp = _spy_impl(monkeypatch, "trailing_update", "jnp")
+    monkeypatch.delenv(registry.TRIDIAG_ENV_VAR, raising=False)
+    spy_pallas = _spy_impl(monkeypatch, "fused_panel_update", "pallas")
+    spy_jnp = _spy_impl(monkeypatch, "fused_panel_update", "jnp")
     n = 44
     A = jnp.asarray(random_symmetric(rng, n))
     w = eigh(A, method="two_stage", b=4, nb=20, eigenvectors=False)
@@ -176,10 +196,11 @@ def test_backend_override_beats_jit_cache(rng, monkeypatch):
     from repro.core import eigh
 
     monkeypatch.delenv(registry.ENV_VAR, raising=False)
+    monkeypatch.delenv(registry.TRIDIAG_ENV_VAR, raising=False)
     n = 36
     A = jnp.asarray(random_symmetric(rng, n))
     w1 = eigh(A, b=4, nb=16, eigenvectors=False)  # traces the pallas path
-    spy_jnp = _spy_impl(monkeypatch, "trailing_update", "jnp")
+    spy_jnp = _spy_impl(monkeypatch, "fused_panel_update", "jnp")
     with registry.use_backend("jnp"):
         w2 = eigh(A, b=4, nb=16, eigenvectors=False)  # same shape + statics
     assert spy_jnp["n"] > 0, "jnp override was swallowed by the jit cache"

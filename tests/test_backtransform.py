@@ -187,7 +187,13 @@ def test_batch_plan_vmap_blocked(rng):
     for i in range(batch):
         wi, Vi = pl(As[i])
         np.testing.assert_allclose(np.asarray(wB[i]), np.asarray(wi), atol=1e-5)
-        np.testing.assert_allclose(np.asarray(VB[i]), np.asarray(Vi), atol=1e-4)
+        # Interpret-mode Pallas kernels are traced inline, so their rounding
+        # depends on the surrounding program: the vmapped batch trace can
+        # round an inverse-iteration pivot the other way and flip a column's
+        # sign.  Eigenvector sign is not defined anyway — align per column.
+        Vb, Vi = np.asarray(VB[i]), np.asarray(Vi)
+        s = np.sign(np.sum(Vb * Vi, axis=0))
+        np.testing.assert_allclose(Vb * s[None, :], Vi, atol=1e-4)
 
 
 def test_registry_jnp_env_pin_covers_backtransform(rng, monkeypatch):
